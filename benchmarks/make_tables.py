@@ -1,0 +1,64 @@
+"""Generate the EXPERIMENTS.md §Roofline tables from dry-run + roofline JSON.
+
+  PYTHONPATH=src python -m benchmarks.make_tables \
+      results/roofline_baseline.json results/roofline_opt.json
+"""
+
+import json
+import sys
+
+sys.path.insert(0, "src")
+
+from repro.configs import ARCHS, SHAPES, get_config
+from repro.models.registry import model_flops, supports_shape
+
+PEAK = 197e12
+
+
+def load(path):
+    with open(path) as f:
+        rows = json.load(f)
+    return {(r["arch"], r["shape"], r["mesh"]): r for r in rows}
+
+
+def fraction(r, mf_chip):
+    dom = max(r["t_compute_s"], r["t_memory_s"], r["t_collective_s"])
+    return (mf_chip / PEAK) / dom if dom > 0 else float("nan")
+
+
+def main():
+    base = load(sys.argv[1])
+    opt = load(sys.argv[2]) if len(sys.argv) > 2 else None
+
+    print("| arch | shape | mesh | compute s | memory s | collective s | dominant |"
+          " MODEL/HLO flops | roofline frac (base) |" +
+          (" frac (opt) |" if opt else ""))
+    print("|---|---|---|---|---|---|---|---|---|" + ("---|" if opt else ""))
+    for arch in ARCHS:
+        for shape in SHAPES:
+            ok, why = supports_shape(get_config(arch), SHAPES[shape])
+            for mesh, chips in [("16x16", 256), ("2x16x16", 512)]:
+                key = (arch, shape, mesh)
+                if not ok:
+                    if mesh == "16x16":
+                        print(f"| {arch} | {shape} | - | - | - | - | skipped | - | - |"
+                              + (" - |" if opt else ""))
+                    continue
+                r = base.get(key)
+                if r is None:
+                    continue
+                mf = model_flops(get_config(arch), SHAPES[shape]) / chips
+                ratio = mf / max(r["hlo_flops_per_chip"], 1)
+                fb = fraction(r, mf)
+                row = (f"| {arch} | {shape} | {mesh} | {r['t_compute_s']:.3f} |"
+                       f" {r['t_memory_s']:.3f} | {r['t_collective_s']:.3f} |"
+                       f" {r['dominant']} | {ratio:.2f} | {fb:.3f} |")
+                if opt:
+                    ro = opt.get(key)
+                    fo = fraction(ro, mf) if ro else float("nan")
+                    row += f" {fo:.3f} |"
+                print(row)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,110 @@
+import os
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+"""Perf-iteration harness (§Perf): lower one (arch, shape) cell with config
+overrides, re-derive the roofline terms, print before/after-comparable rows.
+
+  PYTHONPATH=src python -m benchmarks.perf_iter qwen2-72b train_4k \
+      --set remat=dots --tag B1
+"""
+
+import argparse
+import dataclasses
+import json
+import sys
+import time
+
+sys.path.insert(0, "src")
+sys.path.insert(0, "benchmarks")
+
+import jax
+
+from roofline import analyze_text, roofline_terms
+from repro.configs import ARCHS, SHAPES, get_config
+from repro.models.registry import model_flops
+from repro.launch import dryrun as DR
+from repro.launch.mesh import make_production_mesh
+
+
+def run(arch: str, shape_name: str, overrides=None, moe_overrides=None,
+        tag: str = "base", multi_pod: bool = False, hlo_out=None):
+    cfg = get_config(arch)
+    if overrides:
+        cfg = dataclasses.replace(cfg, **overrides)
+    if moe_overrides:
+        cfg = dataclasses.replace(cfg, moe=dataclasses.replace(cfg.moe, **moe_overrides))
+    # temporarily install the modified config
+    old = ARCHS[arch]
+    ARCHS[arch] = cfg
+    try:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+        t0 = time.time()
+        with jax.set_mesh(mesh):
+            fn, args, in_sh, out_sh, donate = DR.build_cell(arch, shape_name, mesh)
+            lowered = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh,
+                              donate_argnums=donate).lower(*args)
+            compiled = lowered.compile()
+        text = compiled.as_text()
+        if hlo_out:
+            with open(hlo_out, "w") as f:
+                f.write(text)
+        a = analyze_text(text)
+        n_chips = 512 if multi_pod else 256
+        a.update(roofline_terms(a, n_chips))
+        mf = model_flops(cfg, SHAPES[shape_name]) / n_chips
+        mem = compiled.memory_analysis()
+        a["peak_gib"] = getattr(mem, "peak_memory_in_bytes", 0) / 2**30
+        a["model_flops_per_chip"] = mf
+        a["useful_ratio"] = mf / max(a["hlo_flops_per_chip"], 1)
+        dom_t = max(a["t_compute_s"], a["t_memory_s"], a["t_collective_s"])
+        a["roofline_fraction"] = (mf / 197e12) / dom_t if dom_t else 0.0
+        print(f"[{tag}] {arch} {shape_name}  compile={time.time()-t0:.0f}s")
+        print(f"[{tag}]   comp={a['t_compute_s']:8.3f}s mem={a['t_memory_s']:8.3f}s "
+              f"coll={a['t_collective_s']:8.3f}s dom={a['dominant']}")
+        cb = a["collective_bytes_per_chip"]
+        print(f"[{tag}]   AG={cb['all-gather']/2**30:.1f} AR={cb['all-reduce']/2**30:.1f} "
+              f"RS={cb['reduce-scatter']/2**30:.1f} A2A={cb['all-to-all']/2**30:.1f} "
+              f"CP={cb['collective-permute']/2**30:.1f} GiB/chip  "
+              f"traffic={a['hbm_traffic_per_chip']/2**30:.0f} GiB")
+        print(f"[{tag}]   useful_flops_ratio={a['useful_ratio']:.2f} "
+              f"roofline_fraction={a['roofline_fraction']:.3f} peak={a['peak_gib']:.2f} GiB",
+              flush=True)
+        return a
+    finally:
+        ARCHS[arch] = old
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("arch")
+    ap.add_argument("shape")
+    ap.add_argument("--set", action="append", default=[],
+                    help="cfg override k=v (remat=dots, dtype=bfloat16...)")
+    ap.add_argument("--moe-set", action="append", default=[])
+    ap.add_argument("--tag", default="iter")
+    ap.add_argument("--hlo-out", default=None)
+    args = ap.parse_args()
+
+    def parse(kvs):
+        out = {}
+        for kv in kvs:
+            k, v = kv.split("=", 1)
+            for cast in (int, float):
+                try:
+                    v = cast(v)
+                    break
+                except ValueError:
+                    continue
+            if v in ("True", "False"):
+                v = v == "True"
+            out[k] = v
+        return out
+
+    run(args.arch, args.shape, overrides=parse(args.set) or None,
+        moe_overrides=parse(args.moe_set) or None, tag=args.tag,
+        hlo_out=args.hlo_out)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,265 @@
+"""Roofline analysis from dry-run HLO (task §ROOFLINE).
+
+XLA's ``cost_analysis()`` counts while-loop bodies ONCE, which under-counts a
+scan-over-layers model by ~n_layers and contains no collective traffic at
+all.  This module parses the optimized HLO text instead:
+
+* builds the call graph (ENTRY -> fusions/calls/while bodies) with
+  **multiplicities** from while trip counts (largest integer constant in the
+  condition computation — exact for lax.scan lowering);
+* counts dot/convolution FLOPs from operand/result shapes x multiplicity;
+* sums collective payload bytes (all-gather / all-reduce / reduce-scatter /
+  all-to-all / collective-permute) x multiplicity;
+* estimates HBM traffic as (result + operand bytes) of non-fused
+  instructions x multiplicity.
+
+Terms (TPU v5e): compute = FLOPs / (chips x 197e12), memory = bytes /
+(chips x 819e9), collective = coll_bytes / (chips x 50e9).
+
+  PYTHONPATH=src python -m benchmarks.roofline results/dryrun/hlo [--json out]
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import re
+import sys
+from typing import Dict, List, Optional, Tuple
+
+PEAK_FLOPS = 197e12  # bf16 / chip
+HBM_BW = 819e9  # bytes/s / chip
+LINK_BW = 50e9  # bytes/s / link (ICI)
+
+DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1,
+               "f8e5m2": 1, "s64": 8, "u64": 8, "s32": 4, "u32": 4,
+               "s16": 2, "u16": 2, "s8": 1, "u8": 1, "pred": 1, "c64": 8,
+               "c128": 16, "token": 0, "opaque": 0}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_INSTR_RE = re.compile(r"^\s+(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*(.+?)\s+([\w\-]+)\((.*)")
+_COMP_RE = re.compile(r"^(ENTRY\s+)?%?([\w\.\-]+)\s*(?:\([^)]*\))?.*\{\s*$")
+_CALL_RE = re.compile(r"(?:calls|to_apply|body|condition)=%?([\w\.\-]+)")
+_OPERAND_RE = re.compile(r"%([\w\.\-]+)")
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+
+def shape_bytes(shape_str: str) -> int:
+    """Total bytes of all array shapes appearing in a type string."""
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(shape_str):
+        if dt not in DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * DTYPE_BYTES[dt]
+    return total
+
+
+def shape_elems(shape_str: str) -> int:
+    m = _SHAPE_RE.search(shape_str)
+    if not m:
+        return 0
+    n = 1
+    for d in m.group(2).split(","):
+        if d:
+            n *= int(d)
+    return n
+
+
+class Instr:
+    __slots__ = ("name", "shape", "op", "rest", "operands")
+
+    def __init__(self, name, shape, op, rest):
+        self.name = name
+        self.shape = shape
+        self.op = op
+        self.rest = rest
+        self.operands: List[str] = []
+
+
+def parse_hlo(text: str) -> Dict[str, List[Instr]]:
+    comps: Dict[str, List[Instr]] = {}
+    cur: Optional[str] = None
+    entry = None
+    for line in text.splitlines():
+        if cur is None:
+            m = _COMP_RE.match(line)
+            if m and "{" in line:
+                cur = m.group(2)
+                comps[cur] = []
+                if m.group(1):
+                    entry = cur
+            continue
+        if line.startswith("}"):
+            cur = None
+            continue
+        m = _INSTR_RE.match(line)
+        if m:
+            name, shape, op, rest = m.groups()
+            ins = Instr(name, shape, op, rest)
+            # operand names: up to the first "),"
+            paren = rest.split(")")[0]
+            ins.operands = _OPERAND_RE.findall(paren)
+            comps[cur].append(ins)
+    comps["__entry__"] = comps.get(entry, [])
+    comps["__entry_name__"] = entry  # type: ignore
+    return comps
+
+
+def _trip_count(comps, cond_name: str, while_rest: str = "") -> int:
+    # XLA annotates scan-lowered loops with the exact trip count
+    m = re.search(r'"known_trip_count":\{"n":"(\d+)"\}', while_rest)
+    if m:
+        return int(m.group(1))
+    best = 1
+    for ins in comps.get(cond_name, []):
+        if ins.op == "constant":
+            m = re.search(r"constant\((\d+)\)", "constant(" + ins.rest)
+            if m:
+                best = max(best, int(m.group(1)))
+    return best
+
+
+def multiplicities(comps) -> Dict[str, float]:
+    entry = comps["__entry_name__"]
+    mult: Dict[str, float] = {entry: 1.0}
+    fusion_bodies = set()
+    order = [entry]
+    seen = {entry}
+    while order:
+        cname = order.pop(0)
+        m = mult.get(cname, 1.0)
+        for ins in comps.get(cname, []):
+            called = _CALL_RE.findall(ins.rest)
+            if not called:
+                continue
+            factor = 1.0
+            if ins.op == "while":
+                mm = re.search(r"body=%?([\w\.\-]+)", ins.rest)
+                mc = re.search(r"condition=%?([\w\.\-]+)", ins.rest)
+                body = mm.group(1) if mm else None
+                cond = mc.group(1) if mc else None
+                trips = _trip_count(comps, cond, ins.rest) if cond else 1
+                for c in filter(None, [body, cond]):
+                    mult[c] = mult.get(c, 0.0) + m * trips
+                    if c not in seen:
+                        seen.add(c)
+                        order.append(c)
+                continue
+            if ins.op == "fusion":
+                for c in called:
+                    fusion_bodies.add(c)
+            for c in called:
+                mult[c] = mult.get(c, 0.0) + m * factor
+                if c not in seen:
+                    seen.add(c)
+                    order.append(c)
+    mult["__fusion_bodies__"] = fusion_bodies  # type: ignore
+    return mult
+
+
+def dot_flops(ins: Instr, symtab: Dict[str, str]) -> float:
+    out_elems = shape_elems(ins.shape)
+    lhs = symtab.get(ins.operands[0]) if ins.operands else None
+    k = 1
+    mdims = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", ins.rest)
+    if lhs and mdims:
+        m2 = _SHAPE_RE.search(lhs)
+        if m2:
+            dims = [int(d) for d in m2.group(2).split(",") if d]
+            for di in mdims.group(1).split(","):
+                if di and int(di) < len(dims):
+                    k *= dims[int(di)]
+    return 2.0 * out_elems * k
+
+
+def analyze_text(text: str) -> Dict:
+    comps = parse_hlo(text)
+    mult = multiplicities(comps)
+    fusion_bodies: set = mult.pop("__fusion_bodies__")  # type: ignore
+    entry_name = comps.pop("__entry_name__")
+    comps.pop("__entry__")
+
+    flops = 0.0
+    coll_bytes: Dict[str, float] = {c: 0.0 for c in COLLECTIVES}
+    traffic = 0.0
+    NO_TRAFFIC = {"parameter", "constant", "tuple", "get-tuple-element",
+                  "bitcast", "while", "fusion", "call", "conditional",
+                  "after-all", "partition-id"}
+    for cname, instrs in comps.items():
+        m = mult.get(cname, 0.0)
+        if m == 0.0:
+            continue
+        symtab = {i.name: i.shape for i in instrs}
+        in_fusion = cname in fusion_bodies
+        for ins in instrs:
+            if ins.op in ("dot", "convolution"):
+                flops += m * dot_flops(ins, symtab)
+            if ins.op in COLLECTIVES:
+                coll_bytes[ins.op] += m * shape_bytes(ins.shape)
+            if not in_fusion and ins.op not in NO_TRAFFIC:
+                out_b = shape_bytes(ins.shape)
+                in_b = sum(shape_bytes(symtab.get(o, "")) for o in ins.operands)
+                traffic += m * (out_b + in_b)
+    return {
+        "hlo_flops_per_chip": flops,
+        "collective_bytes_per_chip": coll_bytes,
+        "collective_total_per_chip": sum(coll_bytes.values()),
+        "hbm_traffic_per_chip": traffic,
+    }
+
+
+def roofline_terms(analysis: Dict, n_chips: int) -> Dict:
+    """SPMD HLO shapes are PER-DEVICE, so the parsed sums are per-chip
+    already; each term divides by one chip's peak.  (Equivalently:
+    global_bytes/(chips x bw) with global = per_chip x chips — the task
+    formula with the global quantities.)"""
+    t_comp = analysis["hlo_flops_per_chip"] / PEAK_FLOPS
+    t_mem = analysis["hbm_traffic_per_chip"] / HBM_BW
+    t_coll = analysis["collective_total_per_chip"] / LINK_BW
+    dominant = max(("compute", t_comp), ("memory", t_mem),
+                   ("collective", t_coll), key=lambda kv: kv[1])[0]
+    return {"t_compute_s": t_comp, "t_memory_s": t_mem,
+            "t_collective_s": t_coll, "dominant": dominant}
+
+
+def analyze_file(path: str) -> Dict:
+    with open(path) as f:
+        text = f.read()
+    base = os.path.basename(path).replace(".hlo", "")
+    arch, shape, mesh = base.split("__")
+    n_chips = 512 if mesh == "2x16x16" else 256
+    out = analyze_text(text)
+    out.update({"arch": arch, "shape": shape, "mesh": mesh, "n_chips": n_chips})
+    out.update(roofline_terms(out, n_chips))
+    return out
+
+
+def main():
+    hlo_dir = sys.argv[1] if len(sys.argv) > 1 else "results/dryrun/hlo"
+    out_json = None
+    if "--json" in sys.argv:
+        out_json = sys.argv[sys.argv.index("--json") + 1]
+    rows = []
+    for fname in sorted(os.listdir(hlo_dir)):
+        if not fname.endswith(".hlo"):
+            continue
+        r = analyze_file(os.path.join(hlo_dir, fname))
+        rows.append(r)
+        print(f"{r['arch']:24s} {r['shape']:12s} {r['mesh']:8s} "
+              f"comp={r['t_compute_s']*1e3:9.3f}ms mem={r['t_memory_s']*1e3:9.3f}ms "
+              f"coll={r['t_collective_s']*1e3:9.3f}ms dom={r['dominant']}",
+              flush=True)
+    if out_json:
+        os.makedirs(os.path.dirname(out_json) or ".", exist_ok=True)
+        with open(out_json, "w") as f:
+            json.dump(rows, f, indent=1)
+
+
+if __name__ == "__main__":
+    main()

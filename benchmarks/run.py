@@ -1,0 +1,348 @@
+"""Benchmark harness — one function per paper table/figure.
+
+Emits ``name,us_per_call,derived`` CSV rows.  Three result tiers per
+DESIGN.md §2.2: counted IOPS/bytes (exact), measured CPU wall-time (real),
+modelled NVMe/S3 latency (paper Fig-1 device model applied to the counted
+trace).  Dataset sizes are scaled down from the paper's 1 B rows to CPU
+scale; rates are per-row so the comparisons carry.
+
+  PYTHONPATH=src python -m benchmarks.run            # all
+  PYTHONPATH=src python -m benchmarks.run fig10 fig13
+"""
+
+from __future__ import annotations
+
+import sys
+import time
+
+import numpy as np
+
+sys.path.insert(0, "src")
+
+from repro.core import arrays as A, types as T
+from repro.core.file import FileReader, WriteOptions, write_table
+from repro.core.io_sim import NVME, S3, model_time
+from repro.data import synth
+
+ROWS = {"scalar": 200_000, "string": 100_000, "scalar-list": 50_000,
+        "string-list": 30_000, "vector": 4_000, "vector-list": 1_500,
+        "image": 800, "image-list": 300}
+TAKE_N = 256  # one paper 'take' op
+
+
+def _emit(name: str, us: float, derived: str = ""):
+    print(f"{name},{us:.2f},{derived}")
+
+
+def _take_bench(arr, opts, n_rows, repeats=3):
+    fr = FileReader(write_table({"c": arr}, opts))
+    rng = np.random.default_rng(0)
+    rows = rng.choice(n_rows, min(TAKE_N, n_rows), replace=False)
+    fr.take("c", rows[:4])  # warm code paths
+    fr.reset_io()
+    t0 = time.perf_counter()
+    for _ in range(repeats):
+        fr.take("c", rows)
+    dt = (time.perf_counter() - t0) / repeats
+    st = fr.io_stats()
+    st.n_iops //= repeats
+    st.bytes_read //= repeats
+    st.useful_bytes //= repeats
+    t_nvme = model_time(st, NVME)
+    rows_s = len(rows) / max(t_nvme, dt)  # disk- or cpu-bound, whichever binds
+    return dt, st, t_nvme, rows_s, fr
+
+
+def _scan_bench(arr, opts, repeats=3):
+    fr = FileReader(write_table({"c": arr}, opts))
+    fr.scan("c")
+    fr.reset_io()
+    t0 = time.perf_counter()
+    for _ in range(repeats):
+        fr.scan("c")
+    dt = (time.perf_counter() - t0) / repeats
+    st = fr.io_stats()
+    st.bytes_read //= repeats
+    return dt, st, fr
+
+
+# ---------------------------------------------------------------------------
+
+
+def fig1_device_model():
+    """Fig 1: device characteristics used by the model tier."""
+    from repro.core.io_sim import IOStats
+
+    for dev in (NVME, S3):
+        for size in [4096, 64 * 1024, 1 << 20]:
+            st = IOStats(n_iops=1000, bytes_read=1000 * size,
+                         useful_bytes=1000 * size, max_phase=1)
+            t = model_time(st, dev)
+            _emit(f"fig1/{dev.name}/rand{size//1024}KiB", t / 1000 * 1e6,
+                  f"iops={1000/t:.0f}")
+
+
+def fig10_parquet_random_access():
+    """Fig 10: Parquet random access across types + page-size sweep, and the
+    §5 headline: optimized config is ~60x the default config."""
+    for tname, n in ROWS.items():
+        arr = synth.paper_type(tname, n, seed=1)
+        dt, st, t_nvme, rows_s, _ = _take_bench(
+            arr, WriteOptions("parquet", page_bytes=8192), n)
+        _emit(f"fig10/parquet8k/{tname}", dt / TAKE_N * 1e6,
+              f"rows_per_s={rows_s:.0f};iops_row={st.n_iops/TAKE_N:.2f};"
+              f"amp={st.read_amplification:.1f}")
+    # page size sweep on scalars (8KiB .. 1MiB 'default')
+    arr = synth.paper_type("scalar", ROWS["scalar"], seed=1)
+    base = None
+    for ps in [8 << 10, 64 << 10, 256 << 10, 1 << 20]:
+        dt, st, t_nvme, rows_s, _ = _take_bench(
+            arr, WriteOptions("parquet", page_bytes=ps), ROWS["scalar"])
+        if ps == 8 << 10:
+            base = rows_s
+        _emit(f"fig10/pagesize/{ps>>10}KiB", dt / TAKE_N * 1e6,
+              f"rows_per_s={rows_s:.0f}")
+    # the 60x claim: default (1MiB pages + dict, cold) vs optimized (8KiB)
+    dt_d, st_d, t_d, rows_d, _ = _take_bench(
+        arr, WriteOptions("parquet", page_bytes=1 << 20, dict_encode=True),
+        ROWS["scalar"])
+    _emit("fig10/default_vs_tuned", dt_d / TAKE_N * 1e6,
+          f"speedup={base/rows_d:.0f}x;default_rows_s={rows_d:.0f};"
+          f"tuned_rows_s={base:.0f}")
+    # analytic extrapolation to the paper's 1B-row scale (no coalescing):
+    # tuned = one 8KiB IOP/row; default = one 1MiB page + dict page per take
+    t_tuned = max(1 / NVME.iops_4k, 8192 / NVME.seq_bw)
+    t_default = (1 << 20) / NVME.seq_bw + (1 << 20) * 8 / NVME.seq_bw / TAKE_N
+    _emit("fig10/default_vs_tuned_1Brow_model", 0.0,
+          f"speedup={t_default/t_tuned:.0f}x;tuned_rows_s={1/t_tuned:.0f};"
+          f"default_rows_s={1/t_default:.0f}")
+
+
+def fig11_encodings_random_access():
+    """Fig 11: Arrow-style vs Lance 2.1 (adaptive) random access + nesting."""
+    for tname, n in ROWS.items():
+        arr = synth.paper_type(tname, n, seed=1)
+        for enc, opts in [("arrow", WriteOptions("arrow")),
+                          ("lance", WriteOptions("lance"))]:
+            dt, st, t_nvme, rows_s, fr = _take_bench(arr, opts, n)
+            _emit(f"fig11/{enc}/{tname}", dt / TAKE_N * 1e6,
+                  f"nvme_rows_per_s={TAKE_N/max(t_nvme,1e-9):.0f};"
+                  f"iops_row={st.n_iops/TAKE_N:.2f};"
+                  f"phases={st.max_phase};cache={fr.search_cache_bytes()}")
+    # nesting depth: scalar wrapped in k list levels
+    take_rows = np.arange(0, 2000, 97)
+    for depth in [0, 1, 2, 3]:
+        typ = T.int64()
+        py = list(range(2000))
+        for _ in range(depth):
+            typ = T.List(typ)
+            py = [[v] for v in py]
+        arr = A.from_pylist(py, typ)
+        for enc, opts in [("arrow", WriteOptions("arrow")),
+                          ("lance-fullzip", WriteOptions("lance-fullzip"))]:
+            fr = FileReader(write_table({"c": arr}, opts))
+            fr.reset_io()
+            fr.take("c", take_rows)
+            st = fr.io_stats()
+            _emit(f"fig11/nesting{depth}/{enc}", 0.0,
+                  f"iops_row={st.n_iops/len(take_rows):.2f};phases={st.max_phase}")
+
+
+def fig12_fullzip_vs_miniblock():
+    """Fig 12: full-zip is lighter-weight for random access at all sizes."""
+    for width in [8, 32, 128, 512, 2048]:
+        n = max(2_000, 200_000 * 8 // width)
+        rng = np.random.default_rng(0)
+        arr = A.FixedSizeListArray(
+            T.FixedSizeList(T.Primitive("float32", nullable=False), width // 4),
+            np.ones(n, bool),
+            rng.standard_normal((n, width // 4)).astype(np.float32))
+        for enc in ["lance-fullzip", "lance-miniblock"]:
+            dt, st, t_nvme, rows_s, _ = _take_bench(arr, WriteOptions(enc), n)
+            _emit(f"fig12/{enc}/{width}B", dt / TAKE_N * 1e6,
+                  f"rows_per_s={rows_s:.0f};cpu_us_row={dt/TAKE_N*1e6:.1f};"
+                  f"amp={st.read_amplification:.1f}")
+
+
+def _lance_codec(sc):
+    # the paper's table: names Dict+FSST, prompts/reviews FSST, dates bitpack,
+    # code/images/websites LZ4(->zstd stand-in), embeddings none
+    return {"names": "fsst_lite", "prompts": "fsst_lite", "reviews": "fsst_lite",
+            "code": "zstd_chunk", "images": "zstd_chunk",
+            "websites": "zstd_chunk"}.get(sc, "zstd_chunk")
+
+
+def _raw_bytes(arr):
+    if isinstance(arr, A.VarBinaryArray):
+        return int(arr.offsets[-1]) + 8 * len(arr)
+    if isinstance(arr, (A.FixedSizeListArray, A.PrimitiveArray)):
+        return arr.values.nbytes
+    if isinstance(arr, A.ListArray):
+        return _raw_bytes(arr.child) + 8 * len(arr)
+    raise TypeError(type(arr))
+
+
+def fig13_compression():
+    """Fig 13: Lance compresses like Parquet across the scenario corpus."""
+    for sc in synth.SCENARIOS:
+        n = 2_000 if sc in ("images", "websites", "code") else 20_000
+        arr = synth.scenario(sc, n)
+        raw = _raw_bytes(arr)
+        for enc, opts in [
+            ("parquet", WriteOptions("parquet", bytes_codec="zstd_chunk",
+                                     dict_encode=sc == "names")),
+            ("lance", WriteOptions("lance", bytes_codec="zstd_chunk")),
+            ("lance-fsst", WriteOptions("lance", bytes_codec="fsst_lite")),
+        ]:
+            fr = FileReader(write_table({"c": arr}, opts))
+            ratio = raw / fr.data_bytes()
+            _emit(f"fig13/{enc}/{sc}", 0.0,
+                  f"ratio={ratio:.2f};disk_bytes={fr.data_bytes()}")
+
+
+def fig14_16_full_scan():
+    """Fig 14/16: scan throughput, Parquet vs Lance (values/s + disk MB/s)."""
+    for sc in ["names", "prompts", "dates", "embeddings"]:
+        n = 30_000 if sc != "embeddings" else 4_000
+        arr = synth.scenario(sc, n)
+        best = {}
+        for enc, opts in [
+            ("parquet", WriteOptions("parquet", bytes_codec="zstd_chunk")),
+            ("lance", WriteOptions("lance", bytes_codec="zstd_chunk")),
+        ]:
+            dt, st, fr = _scan_bench(arr, opts)
+            vals_s = n / dt
+            disk_mbs = st.bytes_read / dt / 1e6
+            best[enc] = vals_s
+            _emit(f"fig16/{enc}/{sc}", dt * 1e6,
+                  f"vals_per_s={vals_s:.0f};disk_MBps={disk_mbs:.0f}")
+        _emit(f"fig16/normalized/{sc}", 0.0,
+              f"lance_over_parquet={best['lance']/best['parquet']:.2f}")
+
+
+def fig17_scan_decode_cost():
+    """Fig 17: mini-block scan decode is vectorized; full-zip unzips
+    per-value (CPU-bound)."""
+    n = 60_000
+    rng = np.random.default_rng(0)
+    vals = [bytes(rng.integers(97, 123, 16, dtype=np.uint8)) for _ in range(n)]
+    arr = A.VarBinaryArray.build(vals, utf8=True)
+    per_val = {}
+    for enc in ["lance-miniblock", "lance-fullzip"]:
+        dt, st, fr = _scan_bench(arr, WriteOptions(enc), repeats=2)
+        per_val[enc] = dt / n * 1e6
+        _emit(f"fig17/{enc}/string16B", dt / n * 1e6, f"vals_per_s={n/dt:.0f}")
+    _emit("fig17/miniblock_advantage", 0.0,
+          f"fullzip_over_miniblock={per_val['lance-fullzip']/per_val['lance-miniblock']:.1f}x")
+
+
+def fig18_struct_packing():
+    """Fig 18: packed structs trade single-field scan for whole-struct take."""
+    n = 30_000
+    rng = np.random.default_rng(0)
+    for k in [2, 3, 4, 5]:
+        children = [(f"f{i}", A.PrimitiveArray.build(
+            rng.integers(0, 1 << 40, n).astype(np.int64), nullable=False))
+            for i in range(k)]
+        arr = A.StructArray.build(children, nullable=False)
+        rows = rng.choice(n, TAKE_N, replace=False)
+        fr = FileReader(write_table({"s": arr},
+                                    WriteOptions("lance", packed_columns=("s",))))
+        fr.reset_io()
+        t0 = time.perf_counter()
+        fr.take("s", rows)
+        dt_p = time.perf_counter() - t0
+        st = fr.io_stats()
+        t_take_packed = max(model_time(st, NVME), dt_p)
+        fr.reset_io()
+        t0 = time.perf_counter()
+        fr.scan_packed_field("s", ["f0"])
+        dt_scan_p = time.perf_counter() - t0
+        fr2 = FileReader(write_table({"s": arr}, WriteOptions("lance")))
+        fr2.reset_io()
+        t0 = time.perf_counter()
+        fr2.take("s", rows)
+        dt_s = time.perf_counter() - t0
+        st2 = fr2.io_stats()
+        t_take_shred = max(model_time(st2, NVME), dt_s)
+        _emit(f"fig18/fields{k}", dt_p * 1e6,
+              f"take_rows_s_packed={TAKE_N/t_take_packed:.0f};"
+              f"take_rows_s_shredded={TAKE_N/t_take_shred:.0f};"
+              f"iops_packed={st.n_iops};iops_shredded={st2.n_iops};"
+              f"scan1field_us={dt_scan_p*1e6:.0f}")
+
+
+def kernel_bench():
+    """Device decode paths: ref-oracle throughput on CPU + kernel validation
+    (interpret mode executes the kernel body; wall-time is not TPU time)."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core.compression import bitpack
+    from repro.kernels import ops
+
+    rng = np.random.default_rng(0)
+    n, bits = 1 << 20, 11
+    v = rng.integers(0, 1 << bits, n, dtype=np.uint64)
+    words = jnp.asarray(ops.pack_words(bitpack(v, bits)))
+    f = jax.jit(lambda w: ops.bitunpack(w, n, bits, use_pallas=False))
+    f(words).block_until_ready()
+    t0 = time.perf_counter()
+    for _ in range(10):
+        f(words).block_until_ready()
+    dt = (time.perf_counter() - t0) / 10
+    _emit("kernel/bitunpack_ref_jit", dt * 1e6, f"Mvals_per_s={n/dt/1e6:.0f}")
+    got = np.asarray(ops.bitunpack(words, n, bits))  # pallas interpret
+    assert (got == v).all()
+    _emit("kernel/bitunpack_pallas_validated", 0.0, "allclose=True")
+
+    zipped = jnp.asarray(rng.integers(0, 256, (100_000, 64), dtype=np.uint8))
+    rows = jnp.asarray(rng.integers(0, 100_000, 4096).astype(np.int32))
+    g = jax.jit(lambda z, r: ops.fullzip_gather(z, r, use_pallas=False))
+    g(zipped, rows).block_until_ready()
+    t0 = time.perf_counter()
+    for _ in range(20):
+        g(zipped, rows).block_until_ready()
+    dt = (time.perf_counter() - t0) / 20
+    _emit("kernel/fullzip_gather_ref_jit", dt * 1e6,
+          f"Mrows_per_s={4096/dt/1e6:.1f}")
+
+
+def loader_bench():
+    """Training input pipeline: tokens/s through the Lance scan loader."""
+    from repro.data.loader import TokenLoader, write_token_file
+
+    fb = write_token_file(n_rows=512, seq_len=512, vocab=32_000)
+    loader = TokenLoader(fb, batch=8, seq_len=512)
+    try:
+        next(iter(loader))
+        t0 = time.perf_counter()
+        n = 0
+        for i, b in enumerate(loader):
+            n += b["tokens"].size
+            if i >= 20:
+                break
+        dt = time.perf_counter() - t0
+        _emit("loader/tokens", dt / 20 * 1e6, f"Mtok_per_s={n/dt/1e6:.1f}")
+    finally:
+        loader.close()
+
+
+ALL = [fig1_device_model, fig10_parquet_random_access,
+       fig11_encodings_random_access, fig12_fullzip_vs_miniblock,
+       fig13_compression, fig14_16_full_scan, fig17_scan_decode_cost,
+       fig18_struct_packing, kernel_bench, loader_bench]
+
+
+def main() -> None:
+    want = set(sys.argv[1:])
+    print("name,us_per_call,derived")
+    for fn in ALL:
+        tag = fn.__name__.split("_")[0]
+        if want and tag not in want and fn.__name__ not in want:
+            continue
+        fn()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,57 @@
+"""Serving example: retrieval-augmented batched generation.
+
+The paper's two access patterns in one loop:
+ 1. **random access** — fetch query-neighbor embeddings/documents from a
+    Lance file with full-zip take() (<=2 IOPS/row, no search cache);
+ 2. **sequential decode** — batched generation with a prefill + KV-cache
+    decode loop on a reduced model.
+
+  PYTHONPATH=src python examples/retrieval_serve.py
+"""
+
+import sys
+
+sys.path.insert(0, "src")
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import reduced_config
+from repro.core import WriteOptions, write_table
+from repro.core.io_sim import NVME, model_time
+from repro.data import synth
+from repro.models.registry import build_model
+from repro.serve.engine import BatchedEngine, Retriever
+
+N_DOCS = 5_000
+
+
+def main():
+    rng = np.random.default_rng(0)
+    # 1. build the document store: embeddings (full-zip: fixed 2 KiB values)
+    emb = synth.scenario("embeddings", N_DOCS)
+    fbytes = write_table({"embedding": emb}, WriteOptions("lance"))
+    retriever = Retriever(fbytes, "embedding")
+
+    # fake ANN results: 8 neighbors per query, 4 queries
+    neighbor_ids = rng.integers(0, N_DOCS, (4, 8))
+    vecs, stats = retriever.fetch(neighbor_ids.reshape(-1))
+    t = model_time(stats, NVME)
+    print(f"[retrieve] {neighbor_ids.size} rows: {stats.n_iops} IOPS, "
+          f"amp={stats.read_amplification:.2f}, modelled NVMe time {t*1e3:.2f} ms")
+
+    # 2. generate with the fetched context (reduced model, greedy decode)
+    cfg = reduced_config("qwen2-72b")
+    model = build_model(cfg)
+    params, _ = model.init(jax.random.PRNGKey(0))
+    engine = BatchedEngine(model, params, max_new=16)
+    prompts = jnp.asarray(rng.integers(1, cfg.vocab, (4, 32)), jnp.int32)
+    out = engine.generate({"tokens": prompts}, n_new=16)
+    print(f"[serve] generated {out.tokens.shape} tokens "
+          f"(batch={out.tokens.shape[0]}, steps={out.steps})")
+    print("[serve] sample:", out.tokens[0][:10])
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,47 @@
+"""End-to-end driver: train a ~100M-param LM for a few hundred steps.
+
+The full stack: Lance mini-block token storage -> scan loader -> sharded
+train_step -> async checkpoints -> fault monitor.  Uses a width-reduced
+smollm config sized to ~100M params so it runs on the CPU container; the
+same driver takes --full on a pod.
+
+  PYTHONPATH=src python examples/train_lm.py --steps 200
+"""
+
+import argparse
+import dataclasses
+import sys
+
+sys.path.insert(0, "src")
+
+from repro.configs import get_config
+from repro.launch.train import train
+from repro.models.registry import param_counts
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    args = ap.parse_args()
+
+    # ~100M-param config: smollm-360m narrowed (d_model 960->512, 12 layers)
+    import repro.configs as C
+
+    base = get_config("smollm-360m")
+    cfg100 = dataclasses.replace(
+        base, name="smollm-100m", n_layers=12, d_model=512, d_ff=1536,
+        n_heads=8, n_kv_heads=4, head_dim=64, vocab=32768)
+    C.ARCHS["smollm-100m"] = cfg100
+    total, _ = param_counts(cfg100)
+    print(f"[example] training {cfg100.name}: {total/1e6:.1f}M params")
+
+    loss, last = train("smollm-100m", reduced=False, steps=args.steps,
+                       batch=args.batch, seq=args.seq,
+                       ckpt_dir="/tmp/ckpt_100m", ckpt_every=100)
+    print(f"[example] finished step {last-1}, loss {loss:.4f}")
+
+
+if __name__ == "__main__":
+    main()

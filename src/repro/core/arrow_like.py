@@ -1,0 +1,245 @@
+"""Arrow-style structural encoding (paper §3.2) — the second baseline.
+
+The nested array is stored as Arrow's dense flat buffers: one validity
+bitmap per nullable level, one offsets buffer per list / var-width level, and
+a values buffer.  No pages, no rep/def levels, no search cache.  Random
+access must chase offsets level by level — the paper's Fig. 4 shows 5 IOPS in
+3 dependent phases for ``List<String>``; this reader reproduces exactly those
+counts.  Optional whole-buffer compression renders the column opaque, which
+is why compressed Arrow files cannot do random access (§6.2).
+
+This is also the structural encoding of the Lance 2.0 format that the paper
+benchmarks as its "Arrow-style" representative (§5.3).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from . import arrays as A
+from . import types as T
+from .encodings_base import EncodedColumn, pad_to
+from .io_sim import IOTracker
+
+try:
+    import zstandard as _zstd
+
+    _C = _zstd.ZstdCompressor(level=1)
+    _D = _zstd.ZstdDecompressor()
+except Exception:  # pragma: no cover
+    _zstd = None
+
+__all__ = ["encode_arrow", "ArrowReader"]
+
+
+def _collect_buffers(arr: A.Array, path: str, out: List[Tuple[str, str, np.ndarray, int]]):
+    """Flatten into (name, role, bytes, logical_len) buffers, Arrow layout."""
+    n = len(arr)
+    if arr.type.nullable:
+        out.append((path, "validity", np.packbits(arr.validity, bitorder="little"), n))
+    if isinstance(arr, A.PrimitiveArray):
+        out.append((path, "values", np.frombuffer(np.ascontiguousarray(arr.values).tobytes(), np.uint8), n))
+    elif isinstance(arr, A.FixedSizeListArray):
+        out.append((path, "values", np.frombuffer(np.ascontiguousarray(arr.values).tobytes(), np.uint8), n))
+    elif isinstance(arr, A.VarBinaryArray):
+        out.append((path, "offsets", np.frombuffer(arr.offsets.tobytes(), np.uint8), n + 1))
+        out.append((path, "data", arr.data, int(arr.offsets[-1])))
+    elif isinstance(arr, A.ListArray):
+        out.append((path, "offsets", np.frombuffer(arr.offsets.tobytes(), np.uint8), n + 1))
+        _collect_buffers(arr.child, path + ".item", out)
+    elif isinstance(arr, A.StructArray):
+        for name, c in arr.children:
+            _collect_buffers(c, path + "." + name, out)
+    else:  # pragma: no cover
+        raise TypeError(type(arr))
+
+
+def encode_arrow(arr: A.Array, compress: bool = False) -> EncodedColumn:
+    bufs: List[Tuple[str, str, np.ndarray, int]] = []
+    _collect_buffers(arr, "c", bufs)
+    payload = b""
+    meta_bufs = []
+    for name, role, data, ln in bufs:
+        raw = data.tobytes()
+        if compress:
+            raw = _C.compress(raw)
+        off = len(payload)
+        payload += pad_to(raw)
+        meta_bufs.append({"name": name, "role": role, "offset": off,
+                          "size": len(raw), "len": ln})
+    meta = {
+        "encoding": "arrow",
+        "buffers": meta_bufs,
+        "n_rows": len(arr),
+        "compressed": compress,
+    }
+    # Arrow needs no search cache: buffer locations are footer metadata.
+    return EncodedColumn("arrow", payload, meta, search_cache_bytes=0)
+
+
+@dataclasses.dataclass
+class _Buf:
+    offset: int
+    size: int
+    len: int
+
+
+class ArrowReader:
+    """Reads the Arrow layout.  Returns nested ``Array`` values directly
+    (this encoding has no rep/def streams)."""
+
+    def __init__(self, meta: Dict, base: int, tracker: IOTracker, typ: T.DataType):
+        self.meta = meta
+        self.base = base
+        self.tracker = tracker
+        self.type = typ
+        self.bufs: Dict[Tuple[str, str], _Buf] = {
+            (b["name"], b["role"]): _Buf(b["offset"], b["size"], b["len"])
+            for b in meta["buffers"]
+        }
+        self._full_cache: Dict[Tuple[str, str], np.ndarray] = {}
+
+    # -- raw access helpers ----------------------------------------------
+    def _read_full(self, key, phase=0) -> np.ndarray:
+        if key in self._full_cache:
+            return self._full_cache[key]
+        b = self.bufs[key]
+        raw = self.tracker.read(self.base + b.offset, b.size, phase=phase)
+        if self.meta["compressed"]:
+            raw = np.frombuffer(_D.decompress(raw.tobytes()), np.uint8)
+        self._full_cache[key] = raw
+        return raw
+
+    def _read_slice(self, key, byte_lo: int, byte_hi: int, phase: int) -> np.ndarray:
+        if self.meta["compressed"]:
+            # opaque: the entire buffer must be fetched + decompressed
+            return self._read_full(key, phase)[byte_lo:byte_hi]
+        b = self.bufs[key]
+        return self.tracker.read(self.base + b.offset + byte_lo, byte_hi - byte_lo, phase=phase)
+
+    def _validity_bit(self, key, i: int, phase: int) -> bool:
+        raw = self._read_slice(key, i // 8, i // 8 + 1, phase)
+        return bool((int(raw[0]) >> (i % 8)) & 1)
+
+    def _offsets_pair(self, key, i: int, phase: int) -> Tuple[int, int]:
+        raw = self._read_slice(key, i * 8, (i + 2) * 8, phase)
+        v = np.frombuffer(raw.tobytes(), np.int64, count=2)
+        return int(v[0]), int(v[1])
+
+    # -- take --------------------------------------------------------------
+    def take(self, rows: np.ndarray) -> A.Array:
+        # cold random access: opaque (compressed) buffers must be re-fetched
+        # per operation -- this is why compressed Arrow cannot random access
+        # (paper sec 6.2)
+        self._full_cache = {}
+        parts = [self._take_node(self.type, "c", int(r), int(r) + 1, 0) for r in rows]
+        out = A.concat(parts) if parts else A.from_pylist([], self.type)
+        self.tracker.note_useful(_array_nbytes(out))
+        return out
+
+    def _take_node(self, typ: T.DataType, path: str, lo: int, hi: int, phase: int) -> A.Array:
+        """Fetch rows [lo, hi) of the node at ``path``; ``phase`` counts the
+        dependent round trips needed to learn [lo, hi)."""
+        n = hi - lo
+        if typ.nullable:
+            raw = self._read_slice((path, "validity"), lo // 8, (hi - 1) // 8 + 1, phase)
+            bits = np.unpackbits(raw, bitorder="little")
+            validity = bits[lo - (lo // 8) * 8 : lo - (lo // 8) * 8 + n].astype(bool)
+        else:
+            validity = np.ones(n, bool)
+        if isinstance(typ, T.Primitive):
+            w = np.dtype(typ.dtype).itemsize
+            raw = self._read_slice((path, "values"), lo * w, hi * w, phase)
+            vals = np.frombuffer(raw.tobytes(), np.dtype(typ.dtype), count=n)
+            return A.PrimitiveArray(typ, validity, vals)
+        if isinstance(typ, T.FixedSizeList):
+            w = np.dtype(typ.child.dtype).itemsize * typ.size
+            raw = self._read_slice((path, "values"), lo * w, hi * w, phase)
+            vals = np.frombuffer(raw.tobytes(), np.dtype(typ.child.dtype)).reshape(n, typ.size)
+            return A.FixedSizeListArray(typ, validity, vals)
+        if isinstance(typ, (T.Utf8, T.Binary)):
+            offs = self._offsets_vector(path, lo, hi, phase)
+            data = self._read_slice((path, "data"), int(offs[0]), int(offs[-1]), phase + 1)
+            return A.VarBinaryArray(typ, validity, offs - offs[0], np.asarray(data))
+        if isinstance(typ, T.List):
+            offs = self._offsets_vector(path, lo, hi, phase)
+            child = self._take_node(typ.child, path + ".item", int(offs[0]), int(offs[-1]), phase + 1)
+            return A.ListArray(typ, validity, offs - offs[0], child)
+        if isinstance(typ, T.Struct):
+            children = tuple(
+                (nm, self._take_node(ft, path + "." + nm, lo, hi, phase))
+                for nm, ft in typ.fields
+            )
+            return A.StructArray(typ, validity, children)
+        raise TypeError(typ)  # pragma: no cover
+
+    def _offsets_vector(self, path: str, lo: int, hi: int, phase: int) -> np.ndarray:
+        raw = self._read_slice((path, "offsets"), lo * 8, (hi + 1) * 8, phase)
+        return np.frombuffer(raw.tobytes(), np.int64, count=hi - lo + 1).copy()
+
+    def _offsets_range(self, path, lo, hi, phase):
+        offs = self._offsets_vector(path, lo, hi, phase)
+        return int(offs[0]), int(offs[-1])
+
+    # -- scan ----------------------------------------------------------------
+    def scan(self) -> A.Array:
+        self._full_cache = {}
+        arr = self._scan_node(self.type, "c")
+        return arr
+
+    def _scan_node(self, typ: T.DataType, path: str) -> A.Array:
+        if typ.nullable:
+            raw = self._read_full((path, "validity"))
+            n = self.bufs[(path, "validity")].len
+            validity = np.unpackbits(raw, bitorder="little")[:n].astype(bool)
+        else:
+            n = None
+            validity = None
+        if isinstance(typ, T.Primitive):
+            raw = self._read_full((path, "values"))
+            vals = np.frombuffer(raw.tobytes(), np.dtype(typ.dtype))
+            n = self.bufs[(path, "values")].len
+            vals = vals[:n]
+            v = validity if validity is not None else np.ones(n, bool)
+            return A.PrimitiveArray(typ, v, vals)
+        if isinstance(typ, T.FixedSizeList):
+            raw = self._read_full((path, "values"))
+            n = self.bufs[(path, "values")].len
+            vals = np.frombuffer(raw.tobytes(), np.dtype(typ.child.dtype))[: n * typ.size]
+            v = validity if validity is not None else np.ones(n, bool)
+            return A.FixedSizeListArray(typ, v, vals.reshape(n, typ.size))
+        if isinstance(typ, (T.Utf8, T.Binary)):
+            offs_raw = self._read_full((path, "offsets"))
+            n = self.bufs[(path, "offsets")].len - 1
+            offs = np.frombuffer(offs_raw.tobytes(), np.int64, count=n + 1)
+            data = self._read_full((path, "data"))[: int(offs[-1])]
+            v = validity if validity is not None else np.ones(n, bool)
+            return A.VarBinaryArray(typ, v, offs.copy(), np.asarray(data))
+        if isinstance(typ, T.List):
+            offs_raw = self._read_full((path, "offsets"))
+            n = self.bufs[(path, "offsets")].len - 1
+            offs = np.frombuffer(offs_raw.tobytes(), np.int64, count=n + 1)
+            child = self._scan_node(typ.child, path + ".item")
+            v = validity if validity is not None else np.ones(n, bool)
+            return A.ListArray(typ, v, offs.copy(), child)
+        if isinstance(typ, T.Struct):
+            children = tuple((nm, self._scan_node(ft, path + "." + nm)) for nm, ft in typ.fields)
+            n = len(children[0][1])
+            v = validity if validity is not None else np.ones(n, bool)
+            return A.StructArray(typ, v, children)
+        raise TypeError(typ)  # pragma: no cover
+
+
+def _array_nbytes(arr: A.Array) -> int:
+    if isinstance(arr, (A.PrimitiveArray, A.FixedSizeListArray)):
+        return int(arr.values.nbytes)
+    if isinstance(arr, A.VarBinaryArray):
+        return int(arr.offsets[-1])
+    if isinstance(arr, A.ListArray):
+        return _array_nbytes(arr.child)
+    if isinstance(arr, A.StructArray):
+        return sum(_array_nbytes(c) for _, c in arr.children)
+    return 0

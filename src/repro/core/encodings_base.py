@@ -1,0 +1,103 @@
+"""Shared interface for structural encodings.
+
+A structural encoding turns one :class:`~repro.core.shred.ShreddedLeaf` (or,
+for the Arrow-style baseline, the original nested array) into a contiguous
+byte payload ("column chunk" / Lance "disk page") plus metadata.  Readers run
+against a :class:`~repro.core.io_sim.IOTracker` so every experiment gets exact
+IOPS / read-amplification accounting.
+
+Readers return leaf *slices* as ``(rep, defs, values)`` aligned entry streams
+for the requested rows; ``repro.core.shred.unshred`` turns those back into
+nested arrays at the file layer.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+import numpy as np
+
+from . import arrays as A
+from .io_sim import IOTracker
+from .shred import ShreddedLeaf
+
+__all__ = ["EncodedColumn", "ColumnReader", "align8", "pad_to", "leaf_slice", "avg_value_bytes"]
+
+
+def align8(n: int) -> int:
+    return (n + 7) & ~7
+
+
+def pad_to(buf: bytes, align: int = 8) -> bytes:
+    pad = (-len(buf)) % align
+    return buf + b"\x00" * pad
+
+
+@dataclasses.dataclass
+class EncodedColumn:
+    """Result of encoding one leaf column."""
+
+    encoding: str
+    payload: bytes  # contiguous bytes written to the data section
+    meta: Dict  # column metadata (written to the footer)
+    # RAM-resident bytes needed for warm random access (the paper's "search
+    # cache"; sec. 2.3).  0.1% of data size is the stated goal.
+    search_cache_bytes: int
+
+
+class ColumnReader:
+    """Random access + scan against an encoded column.
+
+    ``base`` is the payload's offset inside the file; all reads go through the
+    tracker.
+    """
+
+    def __init__(self, meta: Dict, base: int, tracker: IOTracker, leaf_proto: ShreddedLeaf):
+        self.meta = meta
+        self.base = base
+        self.tracker = tracker
+        self.proto = leaf_proto  # carries path/type_path/max levels, no data
+
+    def take(self, rows: np.ndarray) -> ShreddedLeaf:
+        raise NotImplementedError
+
+    def scan(self) -> ShreddedLeaf:
+        raise NotImplementedError
+
+
+def leaf_slice(proto: ShreddedLeaf, rep, defs, values: A.Array, n_rows: int) -> ShreddedLeaf:
+    """Build a ShreddedLeaf result with the prototype's static fields."""
+    n = len(rep) if rep is not None else (len(defs) if defs is not None else len(values))
+    return ShreddedLeaf(
+        path=proto.path,
+        type_path=proto.type_path,
+        leaf_type=proto.leaf_type,
+        rep=rep,
+        defs=defs,
+        values=values,
+        n_entries=n,
+        max_rep=proto.max_rep,
+        max_def=proto.max_def,
+        def_meanings=proto.def_meanings,
+        null_item_code=proto.null_item_code,
+        n_rows=n_rows,
+    )
+
+
+def avg_value_bytes(leaf: ShreddedLeaf) -> float:
+    """Average bytes per leaf value — drives the adaptive encoding choice."""
+    vals = leaf.values
+    if isinstance(vals, A.VarBinaryArray):
+        n = max(1, len(vals))
+        return float(vals.offsets[-1]) / n
+    if isinstance(vals, A.FixedSizeListArray):
+        return float(vals.values.dtype.itemsize * vals.values.shape[1])
+    return float(vals.values.dtype.itemsize)
+
+
+def row_starts_from_rep(rep: Optional[np.ndarray], max_rep: int, n_entries: int) -> np.ndarray:
+    """Boolean mask of entries that begin a new top-level row."""
+    if max_rep == 0 or rep is None:
+        return np.ones(n_entries, dtype=bool)
+    return rep == max_rep

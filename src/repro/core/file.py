@@ -1,0 +1,338 @@
+"""File writer/reader: the container format around the structural encodings.
+
+Layout (one "disk page" per encoded leaf column, paper §2.1: Lance columns
+may have multiple disk pages; we write one per leaf for clarity):
+
+    [leaf payload 0][leaf payload 1]...[footer msgpack][footer_len u64]["LNC1"]
+
+The footer holds the schema, per-leaf encoding metadata and payload offsets.
+It is read once when the file is opened (not counted against per-take IOPS —
+it is the search cache + file metadata of §2.3; its size is reported so the
+0.1 % goal can be checked).
+
+Encodings: ``lance`` (adaptive mini-block/full-zip, §4), ``lance-miniblock``
+/ ``lance-fullzip`` (forced, for the ablations), ``parquet`` (§3.1),
+``arrow`` (§3.2), ``packed`` (struct packing, §4.3).
+"""
+
+from __future__ import annotations
+
+import struct as _struct
+from typing import Dict, Iterable, List, Optional, Sequence
+
+import msgpack
+import numpy as np
+
+from . import arrays as A
+from . import types as T
+from .adaptive import choose_encoding
+from .arrow_like import ArrowReader, encode_arrow
+from .encodings_base import EncodedColumn
+from .fullzip import FullZipReader, encode_fullzip
+from .io_sim import Disk, IOTracker
+from .miniblock import MiniBlockReader, encode_miniblock
+from .packing import PackedStructReader, encode_packed_struct
+from .parquet_like import ParquetReader, encode_parquet
+from .shred import ShreddedLeaf, leaf_paths, shred, unshred
+
+MAGIC = b"LNC1"
+
+__all__ = ["WriteOptions", "write_table", "FileReader", "type_to_dict", "type_from_dict"]
+
+
+# ---------------------------------------------------------------------------
+# schema serialization
+# ---------------------------------------------------------------------------
+
+
+def type_to_dict(t: T.DataType) -> Dict:
+    if isinstance(t, T.Primitive):
+        return {"k": "prim", "dtype": t.dtype, "null": t.nullable}
+    if isinstance(t, T.Utf8):
+        return {"k": "utf8", "null": t.nullable}
+    if isinstance(t, T.Binary):
+        return {"k": "bin", "null": t.nullable}
+    if isinstance(t, T.FixedSizeList):
+        return {"k": "fsl", "child": type_to_dict(t.child), "size": t.size, "null": t.nullable}
+    if isinstance(t, T.List):
+        return {"k": "list", "child": type_to_dict(t.child), "null": t.nullable}
+    if isinstance(t, T.Struct):
+        return {"k": "struct", "fields": [[n, type_to_dict(f)] for n, f in t.fields], "null": t.nullable}
+    raise TypeError(t)
+
+
+def type_from_dict(d: Dict) -> T.DataType:
+    k = d["k"]
+    if k == "prim":
+        return T.Primitive(d["dtype"], d["null"])
+    if k == "utf8":
+        return T.Utf8(d["null"])
+    if k == "bin":
+        return T.Binary(d["null"])
+    if k == "fsl":
+        return T.FixedSizeList(type_from_dict(d["child"]), d["size"], d["null"])
+    if k == "list":
+        return T.List(type_from_dict(d["child"]), d["null"])
+    if k == "struct":
+        return T.Struct(tuple((n, type_from_dict(f)) for n, f in d["fields"]), d["null"])
+    raise TypeError(d)
+
+
+# msgpack with numpy support ------------------------------------------------
+
+
+def _mp_default(obj):
+    if isinstance(obj, np.ndarray):
+        return {"__nd__": True, "d": obj.dtype.str, "s": list(obj.shape), "b": obj.tobytes()}
+    if isinstance(obj, (np.integer,)):
+        return int(obj)
+    if isinstance(obj, (np.floating,)):
+        return float(obj)
+    if isinstance(obj, (np.bool_,)):
+        return bool(obj)
+    if isinstance(obj, tuple):
+        return list(obj)
+    raise TypeError(type(obj))
+
+
+def _mp_hook(obj):
+    if "__nd__" in obj:
+        return np.frombuffer(obj["b"], dtype=np.dtype(obj["d"])).reshape(obj["s"]).copy()
+    return obj
+
+
+def pack_meta(meta) -> bytes:
+    return msgpack.packb(meta, default=_mp_default, use_bin_type=True, strict_types=False)
+
+
+def unpack_meta(blob: bytes):
+    return msgpack.unpackb(blob, object_hook=_mp_hook, raw=False, strict_map_key=False)
+
+
+# ---------------------------------------------------------------------------
+# writer
+# ---------------------------------------------------------------------------
+
+
+class WriteOptions:
+    def __init__(
+        self,
+        encoding: str = "lance",  # lance | lance-miniblock | lance-fullzip | parquet | arrow
+        page_bytes: int = 8 * 1024,  # parquet page target
+        fixed_codec: Optional[str] = None,
+        bytes_codec: Optional[str] = None,
+        dict_encode: bool = False,  # parquet dictionary encoding
+        arrow_compress: bool = False,
+        packed_columns: Sequence[str] = (),  # struct columns to pack (4.3)
+    ):
+        self.encoding = encoding
+        self.page_bytes = page_bytes
+        self.fixed_codec = fixed_codec
+        self.bytes_codec = bytes_codec
+        self.dict_encode = dict_encode
+        self.arrow_compress = arrow_compress
+        self.packed_columns = tuple(packed_columns)
+
+
+def _proto(leaf: ShreddedLeaf) -> ShreddedLeaf:
+    """Strip data, keep static fields (stored in the footer)."""
+    return ShreddedLeaf(
+        path=leaf.path, type_path=leaf.type_path, leaf_type=leaf.leaf_type,
+        rep=None, defs=None, values=None, n_entries=leaf.n_entries,
+        max_rep=leaf.max_rep, max_def=leaf.max_def,
+        def_meanings=leaf.def_meanings, null_item_code=leaf.null_item_code,
+        n_rows=leaf.n_rows,
+    )
+
+
+def _encode_leaf(leaf: ShreddedLeaf, opts: WriteOptions) -> EncodedColumn:
+    enc = opts.encoding
+    if enc == "lance":
+        enc = "lance-" + choose_encoding(leaf)
+    if enc == "lance-miniblock":
+        return encode_miniblock(
+            leaf,
+            fixed_codec=opts.fixed_codec,
+            bytes_codec=opts.bytes_codec or "zstd_chunk",
+        )
+    if enc == "lance-fullzip":
+        bc = opts.bytes_codec or "plain_bytes"
+        from .compression import get_bytes_codec
+
+        if not get_bytes_codec(bc).transparent:
+            # full-zip requires transparent compression; opaque codecs are
+            # applied per value instead (paper §2.2: "an opaque encoding can
+            # be used in a transparent fashion if applied on a per-value
+            # basis" — Lance's per-value LZ4)
+            bc = "zstd_per_value"
+        return encode_fullzip(
+            leaf,
+            fixed_codec=opts.fixed_codec or "plain",
+            bytes_codec=bc,
+        )
+    if enc == "parquet":
+        return encode_parquet(
+            leaf,
+            page_bytes=opts.page_bytes,
+            fixed_codec=opts.fixed_codec,
+            bytes_codec=opts.bytes_codec or "zstd_chunk",
+            dict_encode=opts.dict_encode,
+        )
+    raise ValueError(enc)
+
+
+def write_table(table: Dict[str, A.Array], opts: Optional[WriteOptions] = None) -> bytes:
+    opts = opts or WriteOptions()
+    payload = b""
+    cols_meta: List[Dict] = []
+    for name, arr in table.items():
+        col: Dict = {"name": name, "type": type_to_dict(arr.type), "n_rows": len(arr)}
+        if name in opts.packed_columns:
+            ec = encode_packed_struct(arr)
+            col["kind"] = "packed"
+            col["leaves"] = [{
+                "base": len(payload), "meta": ec.meta, "bytes": len(ec.payload),
+                "search_cache": ec.search_cache_bytes,
+            }]
+            payload += ec.payload + b"\x00" * ((-len(ec.payload)) % 8)
+        elif opts.encoding == "arrow":
+            ec = encode_arrow(arr, compress=opts.arrow_compress)
+            col["kind"] = "arrow"
+            col["leaves"] = [{
+                "base": len(payload), "meta": ec.meta, "bytes": len(ec.payload),
+                "search_cache": ec.search_cache_bytes,
+            }]
+            payload += ec.payload + b"\x00" * ((-len(ec.payload)) % 8)
+        else:
+            col["kind"] = "shredded"
+            leaves_meta = []
+            for leaf in shred(arr):
+                ec = _encode_leaf(leaf, opts)
+                leaves_meta.append({
+                    "base": len(payload), "meta": ec.meta, "bytes": len(ec.payload),
+                    "search_cache": ec.search_cache_bytes,
+                    "path": list(leaf.path),
+                    "n_entries": leaf.n_entries,
+                })
+                payload += ec.payload + b"\x00" * ((-len(ec.payload)) % 8)
+            col["leaves"] = leaves_meta
+        cols_meta.append(col)
+    footer = pack_meta({"columns": cols_meta, "options": {"encoding": opts.encoding}})
+    return payload + footer + _struct.pack("<Q", len(footer)) + MAGIC
+
+
+# ---------------------------------------------------------------------------
+# reader
+# ---------------------------------------------------------------------------
+
+
+_READERS = {
+    "miniblock": MiniBlockReader,
+    "fullzip": FullZipReader,
+    "parquet": ParquetReader,
+}
+
+
+class FileReader:
+    def __init__(self, file_bytes_or_disk, dict_cached: bool = False):
+        if isinstance(file_bytes_or_disk, (bytes, bytearray)):
+            disk = Disk.from_bytes(bytes(file_bytes_or_disk))
+        else:
+            disk = file_bytes_or_disk
+        self.disk = disk
+        self.tracker = IOTracker(disk)
+        raw_tail = disk.read(len(disk) - 12, 12)
+        assert raw_tail[-4:].tobytes() == MAGIC, "bad magic"
+        (flen,) = _struct.unpack("<Q", raw_tail[:8].tobytes())
+        self.footer_bytes = flen
+        footer = disk.read(len(disk) - 12 - flen, flen)
+        self.meta = unpack_meta(footer.tobytes())
+        self.columns = {c["name"]: c for c in self.meta["columns"]}
+        self.dict_cached = dict_cached
+        self._readers: Dict[str, list] = {}
+
+    # -- reader construction ------------------------------------------------
+    def _leaf_readers(self, name: str):
+        if name in self._readers:
+            return self._readers[name]
+        col = self.columns[name]
+        typ = type_from_dict(col["type"])
+        out = []
+        if col["kind"] == "arrow":
+            lm = col["leaves"][0]
+            out.append(ArrowReader(lm["meta"], lm["base"], self.tracker, typ))
+        elif col["kind"] == "packed":
+            lm = col["leaves"][0]
+            out.append(PackedStructReader(lm["meta"], lm["base"], self.tracker, typ))
+        else:
+            protos = {tuple(p): tp for p, tp in leaf_paths(typ)}
+            for lm in col["leaves"]:
+                path = tuple(lm["path"])
+                type_path = protos[path]
+                proto = _proto_from(path, type_path, lm)
+                enc = lm["meta"]["encoding"]
+                cls = _READERS[enc]
+                if enc == "parquet":
+                    out.append(cls(lm["meta"], lm["base"], self.tracker, proto,
+                                   dict_cached=self.dict_cached))
+                else:
+                    out.append(cls(lm["meta"], lm["base"], self.tracker, proto))
+        self._readers[name] = out
+        return out
+
+    # -- public API -----------------------------------------------------------
+    def take(self, name: str, rows) -> A.Array:
+        rows = np.asarray(rows, dtype=np.int64)
+        col = self.columns[name]
+        typ = type_from_dict(col["type"])
+        readers = self._leaf_readers(name)
+        if col["kind"] in ("arrow", "packed"):
+            return readers[0].take(rows)
+        leaves = [r.take(rows) for r in readers]
+        return unshred(leaves, typ)
+
+    def scan(self, name: str) -> A.Array:
+        col = self.columns[name]
+        typ = type_from_dict(col["type"])
+        readers = self._leaf_readers(name)
+        if col["kind"] in ("arrow", "packed"):
+            return readers[0].scan()
+        leaves = [r.scan() for r in readers]
+        return unshred(leaves, typ)
+
+    def scan_packed_field(self, name: str, fields) -> A.Array:
+        readers = self._leaf_readers(name)
+        return readers[0].scan(fields=fields)
+
+    # -- accounting -------------------------------------------------------------
+    def search_cache_bytes(self, name: Optional[str] = None) -> int:
+        cols = [self.columns[name]] if name else self.meta["columns"]
+        total = 0
+        for c in cols:
+            for lm in c["leaves"]:
+                total += lm["search_cache"]
+        return total
+
+    def data_bytes(self, name: Optional[str] = None) -> int:
+        cols = [self.columns[name]] if name else self.meta["columns"]
+        return sum(lm["bytes"] for c in cols for lm in c["leaves"])
+
+    def reset_io(self):
+        self.tracker.reset()
+
+    def io_stats(self, coalesce_gap: int = 0):
+        return self.tracker.stats(coalesce_gap)
+
+
+def _proto_from(path, type_path, lm) -> ShreddedLeaf:
+    from .shred import _def_codes
+
+    codes, meanings, max_def, null_item = _def_codes(type_path)
+    max_rep = sum(1 for t in type_path if isinstance(t, T.List))
+    return ShreddedLeaf(
+        path=path, type_path=tuple(type_path), leaf_type=type_path[-1],
+        rep=None, defs=None, values=None,
+        n_entries=lm.get("n_entries", 0), max_rep=max_rep, max_def=max_def,
+        def_meanings=meanings, null_item_code=null_item,
+        n_rows=lm["meta"].get("n_rows", 0),
+    )

@@ -1,0 +1,144 @@
+"""IOP accounting and storage-device modelling.
+
+The container has no NVMe to benchmark, so results come in three tiers
+(DESIGN.md §2.2):
+
+1. **Counted** — every read issued by an encoding goes through an
+   :class:`IOTracker`; we report exact IOPS, bytes fetched, dependency phases
+   (sequential round-trips) and read amplification.
+2. **Measured** — wall-clock decode/scan work on this CPU (real time).
+3. **Modelled** — the counted trace priced with the paper's Fig. 1 device
+   characteristics (Samsung 970 EVO Plus NVMe; S3 from [4]).
+
+The TPU translation (DESIGN.md §2.1): an IOP ≙ one HBM→VMEM DMA of a
+contiguous tile; ``HBM`` below models that regime for the serving path.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional
+
+import numpy as np
+
+__all__ = ["Disk", "IOTracker", "IOStats", "DeviceModel", "NVME", "S3", "HBM", "model_time"]
+
+
+class Disk:
+    """An addressable byte store (the 'file').  In-memory by default; can be
+    backed by a real file for benchmarks that want the OS in the loop."""
+
+    def __init__(self, data: Optional[np.ndarray] = None, path: Optional[str] = None):
+        if path is not None:
+            self._f = open(path, "rb")
+            self._mem = None
+            self._size = self._f.seek(0, 2)
+        else:
+            self._f = None
+            self._mem = np.asarray(data, dtype=np.uint8) if data is not None else np.zeros(0, np.uint8)
+            self._size = len(self._mem)
+
+    @staticmethod
+    def from_bytes(b: bytes) -> "Disk":
+        return Disk(np.frombuffer(b, dtype=np.uint8).copy())
+
+    def __len__(self) -> int:
+        return self._size
+
+    def read(self, offset: int, size: int) -> np.ndarray:
+        if self._f is not None:
+            self._f.seek(offset)
+            return np.frombuffer(self._f.read(size), dtype=np.uint8)
+        return self._mem[offset : offset + size]
+
+
+@dataclasses.dataclass
+class IOStats:
+    n_iops: int = 0
+    bytes_read: int = 0
+    useful_bytes: int = 0
+    max_phase: int = 0  # dependency depth: number of sequential round trips
+    n_coalesced: int = 0  # IOPS after merging adjacent/overlapping requests
+
+    @property
+    def read_amplification(self) -> float:
+        return self.bytes_read / self.useful_bytes if self.useful_bytes else float("nan")
+
+
+class IOTracker:
+    """Counts every read.  ``phase`` expresses dependencies: a read at phase p
+    could only be issued after all reads at phases < p returned (the paper's
+    'issued in 3 phases' for Arrow List<String>)."""
+
+    def __init__(self, disk: Disk, sector: int = 4096):
+        self.disk = disk
+        self.sector = sector
+        self.ops: List = []  # (offset, size, phase)
+
+    def read(self, offset: int, size: int, phase: int = 0) -> np.ndarray:
+        offset, size = int(offset), int(size)
+        self.ops.append((offset, size, phase))
+        return self.disk.read(offset, size)
+
+    def note_useful(self, nbytes: int) -> None:
+        self._useful = getattr(self, "_useful", 0) + int(nbytes)
+
+    def reset(self) -> None:
+        self.ops = []
+        self._useful = 0
+
+    def stats(self, coalesce_gap: int = 0) -> IOStats:
+        s = IOStats()
+        s.n_iops = len(self.ops)
+        s.bytes_read = sum(sz for _, sz, _ in self.ops)
+        s.useful_bytes = getattr(self, "_useful", 0)
+        s.max_phase = max((p for _, _, p in self.ops), default=-1) + 1
+        # coalescing: merge requests whose byte ranges are within gap
+        ivs = sorted((o, o + sz) for o, sz, _ in self.ops)
+        merged = 0
+        cur_end = None
+        for a, b in ivs:
+            if cur_end is None or a > cur_end + coalesce_gap:
+                merged += 1
+                cur_end = b
+            else:
+                cur_end = max(cur_end, b)
+        s.n_coalesced = merged
+        return s
+
+
+@dataclasses.dataclass(frozen=True)
+class DeviceModel:
+    """First-order device model from the paper's Fig. 1 measurements."""
+
+    name: str
+    iops_4k: float  # peak random 4 KiB IOPS at full queue depth
+    seq_bw: float  # bytes/s sequential
+    latency: float  # per-round-trip latency (seconds)
+    min_read: int  # reads below this size cost the same as this size
+
+
+# Samsung 970 EVO Plus measured in the paper: 850K IOPS @4KiB, 3,400 MiB/s.
+NVME = DeviceModel("nvme_970evo", 850_000, 3400 * (1 << 20), 90e-6, 4096)
+# S3 (c7gn.8xlarge): tens of thousands of IOPS, no benefit < ~100KB reads.
+S3 = DeviceModel("s3", 20_000, 10 * (1 << 30), 30e-3, 100 * 1024)
+# TPU HBM: an "IOP" is a DMA tile; bandwidth 819 GB/s (v5e), ~1 us issue.
+HBM = DeviceModel("tpu_hbm", 2_000_000, 819e9, 1e-6, 512)
+
+
+def model_time(stats: IOStats, dev: DeviceModel, queue_depth: int = 256,
+               use_coalesced: bool = False) -> float:
+    """Price an IO trace on a device: throughput-limited term (max of IOPS
+    limit scaled by request size, and bandwidth) plus dependency round trips
+    amortized across the queue."""
+    n = stats.n_coalesced if use_coalesced else stats.n_iops
+    if n == 0:
+        return 0.0
+    avg = max(stats.bytes_read / n, 1.0)
+    eff = max(avg, dev.min_read)
+    iops_limit = min(dev.iops_4k, dev.seq_bw / eff)
+    t_ops = n / iops_limit
+    t_bw = stats.bytes_read / dev.seq_bw
+    # dependency phases are sequential round trips; with a deep queue their
+    # latency is paid once per phase, not per op
+    return max(t_ops, t_bw) + stats.max_phase * dev.latency

@@ -1,0 +1,395 @@
+"""The mini-block structural encoding (paper §4.2).
+
+Small data types are chunked into compressed mini-blocks of 1–2 disk sectors
+(4–8 KiB target, hard ceiling 32 KiB from the 12-bit word count), each chunk
+holding bit-packed repetition levels, definition levels and value buffers.
+Whole chunks are decoded at once, so opaque compression is allowed; random
+access pays chunk-sized read amplification plus decode work — the trade the
+paper accepts for small types.
+
+Chunk rules implemented exactly as §4.2.1/4.2.2:
+* power-of-two number of entries per chunk (last chunk may be ragged),
+  at most 4096;
+* chunk payload padded to 8-byte words; on-disk chunk meta is 2 bytes
+  (12-bit word count, 4-bit log2(num values));
+* chunk = [u16 n_buffers][u16 size x n_buffers][8-aligned buffers...];
+* buffers: [rep][def][values...] (absent streams are skipped);
+* a repetition index with N+1 = 2 counters per chunk supports one level of
+  random access (§4.2.3), handling rows that split across chunks.
+
+Search cache (§4.2.4): 24 in-memory bytes per chunk without a repetition
+index, 41 with — we model exactly those numbers.
+"""
+
+from __future__ import annotations
+
+import struct
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from . import arrays as A
+from . import types as T
+from .compression import Encoded, get_bytes_codec, get_fixed_codec, min_bits
+from .encodings_base import ColumnReader, EncodedColumn, leaf_slice, pad_to
+from .io_sim import IOTracker
+from .rdlevels import level_bits, pack_levels, unpack_levels
+from .shred import ShreddedLeaf
+
+__all__ = ["encode_miniblock", "MiniBlockReader"]
+
+MAX_CHUNK_VALUES = 4096
+TARGET_CHUNK_BYTES = 8 * 1024  # 1-2 disk sectors compressed
+MAX_CHUNK_WORDS = (1 << 12) - 1  # 12-bit word count
+MIN_CHUNK_VALUES = 32
+
+# in-memory search-cache cost model from the paper (sec 4.2.4)
+CACHE_BYTES_PER_CHUNK = 24
+CACHE_BYTES_PER_CHUNK_WITH_REP = 41
+
+
+def _default_fixed_codec(values: A.Array) -> str:
+    dt = values.values.dtype if not isinstance(values, A.VarBinaryArray) else None
+    if dt is not None and dt.kind in ("i", "u"):
+        return "bitpack"
+    return "plain"
+
+
+def _encode_chunk_values(
+    leaf_type: T.DataType,
+    values: A.Array,
+    fixed_codec: str,
+    bytes_codec: str,
+) -> List[Encoded]:
+    """Encode the (sparse) values of one chunk into 1-2 buffers."""
+    if isinstance(leaf_type, (T.Utf8, T.Binary)):
+        lengths = (values.offsets[1:] - values.offsets[:-1]).astype(np.uint64)
+        bc = get_bytes_codec(bytes_codec)
+        enc_data = bc.encode(lengths, values.data)
+        stored = enc_data.out_lengths if enc_data.out_lengths is not None else lengths
+        enc_lens = get_fixed_codec(fixed_codec if fixed_codec != "plain" else "bitpack").encode(
+            np.asarray(stored, dtype=np.uint64)
+        )
+        return [enc_lens, enc_data]
+    if isinstance(leaf_type, T.FixedSizeList):
+        flat = values.values.reshape(-1)
+        codec = get_fixed_codec("plain" if flat.dtype.kind == "f" else fixed_codec)
+        enc = codec.encode(flat)
+        enc.meta["fsl"] = leaf_type.size
+        enc.meta["codec"] = codec.name
+        return [enc]
+    codec = get_fixed_codec("plain" if values.values.dtype.kind == "f" else fixed_codec)
+    enc = codec.encode(values.values)
+    enc.meta["codec"] = codec.name
+    return [enc]
+
+
+def _decode_chunk_values(
+    leaf_type: T.DataType,
+    bufs: List[np.ndarray],
+    metas: List[Dict],
+    n_values: int,
+    fixed_codec: str,
+    bytes_codec: str,
+) -> A.Array:
+    if isinstance(leaf_type, (T.Utf8, T.Binary)):
+        lens_codec = get_fixed_codec(metas[0].get("codec", "bitpack"))
+        stored = lens_codec.decode(Encoded(bufs[0], metas[0]), n_values).astype(np.int64)
+        bc = get_bytes_codec(bytes_codec)
+        out_lens, out_data = bc.decode(Encoded(bufs[1], metas[1]), stored)
+        offsets = np.zeros(n_values + 1, dtype=np.int64)
+        np.cumsum(out_lens, out=offsets[1:])
+        return A.VarBinaryArray(
+            leaf_type.with_nullable(False), np.ones(n_values, bool), offsets, out_data
+        )
+    codec = get_fixed_codec(metas[0]["codec"])
+    if isinstance(leaf_type, T.FixedSizeList):
+        flat = codec.decode(Encoded(bufs[0], metas[0]), n_values * leaf_type.size)
+        return A.FixedSizeListArray(
+            leaf_type.with_nullable(False),
+            np.ones(n_values, bool),
+            np.asarray(flat).reshape(n_values, leaf_type.size),
+        )
+    vals = codec.decode(Encoded(bufs[0], metas[0]), n_values)
+    return A.PrimitiveArray(
+        leaf_type.with_nullable(False), np.ones(n_values, bool), np.asarray(vals)
+    )
+
+
+def _serialize_chunk(buffers: List[bytes]) -> bytes:
+    """[u16 n_buffers][u16 size each][8-aligned buffer bytes ...] padded to 8."""
+    for b in buffers:
+        if len(b) > 0xFFFF:
+            raise ValueError("buffer exceeds u16 size field")
+    head = struct.pack("<H", len(buffers)) + b"".join(
+        struct.pack("<H", len(b)) for b in buffers
+    )
+    out = pad_to(head)
+    for b in buffers:
+        out += pad_to(b)
+    return pad_to(out)
+
+
+def _parse_chunk(raw: np.ndarray) -> List[np.ndarray]:
+    data = raw.tobytes()
+    (nb,) = struct.unpack_from("<H", data, 0)
+    sizes = struct.unpack_from(f"<{nb}H", data, 2)
+    pos = (2 + 2 * nb + 7) & ~7
+    bufs = []
+    for s in sizes:
+        bufs.append(raw[pos : pos + s])
+        pos = (pos + s + 7) & ~7
+    return bufs
+
+
+def encode_miniblock(
+    leaf: ShreddedLeaf,
+    fixed_codec: Optional[str] = None,
+    bytes_codec: str = "zstd_chunk",
+) -> EncodedColumn:
+    fixed_codec = fixed_codec or _default_fixed_codec(leaf.values)
+    n_entries = leaf.n_entries
+
+    # map each entry to its value slot (sparse values: def==0 entries only)
+    valid_mask = (leaf.defs == 0) if leaf.defs is not None else np.ones(n_entries, bool)
+    value_slot = np.cumsum(valid_mask) - 1
+
+    # rows: entries that start a top-level row
+    if leaf.max_rep > 0:
+        row_start = leaf.rep == leaf.max_rep
+    else:
+        row_start = np.ones(n_entries, dtype=bool)
+
+    chunks: List[bytes] = []
+    chunk_meta: List[Dict] = []
+    rep_index: List[tuple] = []  # (rows_started_before_chunk, first_entry_is_row_start)
+    payload_offsets: List[int] = []
+    pos = 0
+    start = 0
+    rows_before = 0
+    while start < n_entries or (n_entries == 0 and not chunks):
+        k = min(MAX_CHUNK_VALUES, n_entries - start) if n_entries else 0
+        if k > 0:
+            # round down to power of two unless it's the ragged tail
+            if start + k < n_entries:
+                k = 1 << (k.bit_length() - 1)
+        while True:
+            end = start + k
+            e_rep = leaf.rep[start:end] if leaf.rep is not None else None
+            e_def = leaf.defs[start:end] if leaf.defs is not None else None
+            vm = valid_mask[start:end]
+            vals = leaf.values.take(value_slot[start:end][vm])
+            bufs: List[bytes] = []
+            metas: List[Dict] = []
+            if e_rep is not None:
+                bufs.append(pack_levels(e_rep, leaf.max_rep).tobytes())
+                metas.append({"stream": "rep"})
+            if e_def is not None:
+                bufs.append(pack_levels(e_def, leaf.max_def).tobytes())
+                metas.append({"stream": "def"})
+            encs = _encode_chunk_values(leaf.leaf_type, vals, fixed_codec, bytes_codec)
+            for enc in encs:
+                bufs.append(enc.data.tobytes())
+                metas.append(enc.meta)
+            try:
+                blob = _serialize_chunk(bufs)
+            except ValueError:
+                blob = None
+            if (
+                blob is not None
+                and (len(blob) <= TARGET_CHUNK_BYTES or k <= MIN_CHUNK_VALUES)
+                and len(blob) // 8 <= MAX_CHUNK_WORDS
+            ):
+                break
+            if k <= 1:
+                raise ValueError("single value exceeds miniblock limits; "
+                                 "use full-zip for large types")
+            k = max(1, k // 2)
+        n_vals = int(vm.sum())
+        chunks.append(blob)
+        chunk_meta.append(
+            {
+                "n_entries": k,
+                "n_values": n_vals,
+                "words": len(blob) // 8,
+                "bufmeta": metas,
+            }
+        )
+        rep_index.append((rows_before, bool(row_start[start]) if k else True))
+        rows_before += int(row_start[start:end].sum())
+        payload_offsets.append(pos)
+        pos += len(blob)
+        start = end
+        if n_entries == 0:
+            break
+
+    payload = b"".join(chunks)
+    has_rep = leaf.max_rep > 0
+    per_chunk = CACHE_BYTES_PER_CHUNK_WITH_REP if has_rep else CACHE_BYTES_PER_CHUNK
+    meta = {
+        "encoding": "miniblock",
+        "fixed_codec": fixed_codec,
+        "bytes_codec": bytes_codec,
+        "chunks": chunk_meta,
+        "chunk_offsets": payload_offsets,
+        "rep_index": rep_index,
+        "n_rows": leaf.n_rows,
+        "n_entries": n_entries,
+    }
+    return EncodedColumn(
+        encoding="miniblock",
+        payload=payload,
+        meta=meta,
+        search_cache_bytes=per_chunk * len(chunks),
+    )
+
+
+class MiniBlockReader(ColumnReader):
+    def _decode_chunk(self, ci: int, raw: np.ndarray):
+        cm = self.meta["chunks"][ci]
+        bufs = _parse_chunk(raw)
+        k = cm["n_entries"]
+        bi = 0
+        rep = defs = None
+        if self.proto.max_rep > 0:
+            rep = unpack_levels(bufs[bi], k, self.proto.max_rep)
+            bi += 1
+        if self.proto.max_def > 0:
+            defs = unpack_levels(bufs[bi], k, self.proto.max_def)
+            bi += 1
+        vals = _decode_chunk_values(
+            self.proto.leaf_type,
+            bufs[bi:],
+            cm["bufmeta"][bi:],
+            cm["n_values"],
+            self.meta["fixed_codec"],
+            self.meta["bytes_codec"],
+        )
+        return rep, defs, vals
+
+    # ------------------------------------------------------------------
+    def _chunks_for_rows(self, rows: np.ndarray) -> Dict[int, np.ndarray]:
+        """Map sorted unique row ids -> list of chunk indices to fetch."""
+        ri = self.meta["rep_index"]
+        rows_before = np.array([r[0] for r in ri], dtype=np.int64)
+        first_is_start = np.array([r[1] for r in ri], dtype=bool)
+        n_chunks = len(ri)
+        need: Dict[int, list] = {}
+        for r in rows:
+            c0 = int(np.searchsorted(rows_before, r, side="right")) - 1
+            # find chunk where row r+1 starts
+            c1 = int(np.searchsorted(rows_before, r + 1, side="right")) - 1
+            if c1 > c0 and rows_before[c1] == r + 1 and first_is_start[c1]:
+                c1 -= 1
+            need[int(r)] = list(range(c0, min(c1, n_chunks - 1) + 1))
+        return need
+
+    def take(self, rows: np.ndarray) -> ShreddedLeaf:
+        rows = np.asarray(rows, dtype=np.int64)
+        order = np.argsort(rows, kind="stable")
+        srows = rows[order]
+        need = self._chunks_for_rows(srows)
+        all_chunks = sorted({c for cs in need.values() for c in cs})
+        offs = self.meta["chunk_offsets"]
+        sizes = [self.meta["chunks"][c]["words"] * 8 for c in all_chunks]
+        raws = {}
+        for c, sz in zip(all_chunks, sizes):
+            raws[c] = self.tracker.read(self.base + offs[c], sz, phase=0)
+        decoded = {c: self._decode_chunk(c, raws[c]) for c in all_chunks}
+
+        rep_parts, def_parts, val_parts, nrows = [], [], [], 0
+        ri = self.meta["rep_index"]
+        for r in srows:
+            cs = need[int(r)]
+            # concatenate entry streams of the involved chunks, then select
+            # the entries belonging to row r
+            reps = [decoded[c][0] for c in cs]
+            dfs = [decoded[c][1] for c in cs]
+            vls = [decoded[c][2] for c in cs]
+            rep = np.concatenate(reps) if reps[0] is not None else None
+            dfs = np.concatenate(dfs) if dfs[0] is not None else None
+            vals = A.concat(vls) if len(vls) > 1 else vls[0]
+            if self.proto.max_rep > 0:
+                starts = rep == self.proto.max_rep
+            else:
+                starts = np.ones(len(dfs) if dfs is not None else len(vals), bool)
+            # rows started before chunk cs[0] is ri[cs[0]][0]; entries before
+            # the first start in the group belong to row (rows_before - 1),
+            # which cumsum handles naturally (segment id -1 + rows_before).
+            row_of_entry = np.cumsum(starts) - 1 + ri[cs[0]][0]
+            sel = row_of_entry == r
+            valid_sel = sel & ((dfs == 0) if dfs is not None else True)
+            vmask = (dfs == 0) if dfs is not None else np.ones(len(sel), bool)
+            vslot = np.cumsum(vmask) - 1
+            rep_parts.append(rep[sel] if rep is not None else None)
+            def_parts.append(dfs[sel] if dfs is not None else None)
+            val_parts.append(vals.take(vslot[valid_sel]))
+            nrows += 1
+        rep = np.concatenate(rep_parts) if rep_parts and rep_parts[0] is not None else None
+        defs = np.concatenate(def_parts) if def_parts and def_parts[0] is not None else None
+        vals = A.concat(val_parts)
+        self.tracker.note_useful(int(sum(len(v.data) if isinstance(v, A.VarBinaryArray) else v.values.nbytes for v in val_parts)))
+        out = leaf_slice(self.proto, rep, defs, vals, len(rows))
+        return _reorder_rows(out, np.argsort(order, kind="stable"))
+
+    def scan(self, io_chunk: int = 8 << 20) -> ShreddedLeaf:
+        offs = self.meta["chunk_offsets"]
+        total = (offs[-1] + self.meta["chunks"][-1]["words"] * 8) if offs else 0
+        raw_parts = []
+        for p in range(0, total, io_chunk):
+            raw_parts.append(self.tracker.read(self.base + p, min(io_chunk, total - p), phase=0))
+        raw = np.concatenate(raw_parts) if raw_parts else np.zeros(0, np.uint8)
+        reps, dfs, vals = [], [], []
+        for ci, off in enumerate(offs):
+            sz = self.meta["chunks"][ci]["words"] * 8
+            r, d, v = self._decode_chunk(ci, raw[off : off + sz])
+            reps.append(r)
+            dfs.append(d)
+            vals.append(v)
+        rep = np.concatenate(reps) if reps and reps[0] is not None else None
+        defs = np.concatenate(dfs) if dfs and dfs[0] is not None else None
+        if vals:
+            values = A.concat(vals)
+        else:
+            values = _empty_values(self.proto.leaf_type)
+        return leaf_slice(self.proto, rep, defs, values, self.meta["n_rows"])
+
+
+def _empty_values(leaf_type: T.DataType) -> A.Array:
+    if isinstance(leaf_type, (T.Utf8, T.Binary)):
+        return A.VarBinaryArray(
+            leaf_type.with_nullable(False), np.ones(0, bool), np.zeros(1, np.int64), np.zeros(0, np.uint8)
+        )
+    if isinstance(leaf_type, T.FixedSizeList):
+        return A.FixedSizeListArray(
+            leaf_type.with_nullable(False),
+            np.ones(0, bool),
+            np.zeros((0, leaf_type.size), dtype=np.dtype(leaf_type.child.dtype)),
+        )
+    return A.PrimitiveArray(
+        leaf_type.with_nullable(False), np.ones(0, bool), np.zeros(0, np.dtype(leaf_type.dtype))
+    )
+
+
+def _reorder_rows(leaf: ShreddedLeaf, order: np.ndarray) -> ShreddedLeaf:
+    """Reorder a leaf's rows (take() must honor the request order)."""
+    if leaf.max_rep == 0:
+        rep = None
+        defs = leaf.defs[order] if leaf.defs is not None else None
+        vmask = (leaf.defs == 0) if leaf.defs is not None else np.ones(leaf.n_entries, bool)
+        vslot = np.cumsum(vmask) - 1
+        sel = order[vmask[order]]
+        vals = leaf.values.take(vslot[sel])
+        return leaf_slice(leaf, rep, defs, vals, leaf.n_rows)
+    # general case: segment the entry stream by row starts, permute segments
+    starts = leaf.rep == leaf.max_rep
+    seg = np.cumsum(starts) - 1
+    idx_by_row = [np.nonzero(seg == r)[0] for r in range(int(seg[-1]) + 1 if len(seg) else 0)]
+    perm = np.concatenate([idx_by_row[r] for r in order]) if len(order) else np.zeros(0, np.int64)
+    rep = leaf.rep[perm]
+    defs = leaf.defs[perm] if leaf.defs is not None else None
+    vmask = (leaf.defs == 0) if leaf.defs is not None else np.ones(leaf.n_entries, bool)
+    vslot = np.cumsum(vmask) - 1
+    vperm = vslot[perm[vmask[perm]]]
+    vals = leaf.values.take(vperm)
+    return leaf_slice(leaf, rep, defs, vals, leaf.n_rows)

@@ -1,0 +1,64 @@
+"""Pallas TPU kernel: k-bit little-endian unpack -> int32/uint32.
+
+Bit-unpacking ends every transparent integer codec in the paper (control
+words §4.1.1, mini-block values §4.2, repetition indexes §4.1.4), so it is
+the innermost decode hot-spot.  TPU adaptation: the packed stream is viewed
+as uint32 words; each grid step unpacks VALS_PER_BLOCK = 8*128*8 values
+(a (64, 128) tile, lane-aligned for the VPU).  Because
+``VALS_PER_BLOCK * bits`` is a multiple of 32 for every bits<=32, value
+blocks never straddle word-block boundaries, so the input BlockSpec tiles
+exactly ``32 * bits`` words per step with no halo.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["bitunpack_pallas", "VALS_PER_BLOCK"]
+
+SUBLANES, LANES = 64, 128
+VALS_PER_BLOCK = SUBLANES * LANES  # 8192 values / grid step
+# words consumed per block = VALS_PER_BLOCK * bits / 32 = 256 * bits
+
+
+def _kernel(words_ref, out_ref, *, bits: int):
+    j = (
+        jax.lax.broadcasted_iota(jnp.uint32, (SUBLANES, LANES), 0) * LANES
+        + jax.lax.broadcasted_iota(jnp.uint32, (SUBLANES, LANES), 1)
+    )
+    bitpos = j * jnp.uint32(bits)
+    w = (bitpos // 32).astype(jnp.int32)
+    sh = bitpos % 32
+    words = words_ref[...]
+    w0 = jnp.take(words, w, axis=0)
+    w1 = jnp.take(words, jnp.minimum(w + 1, words.shape[0] - 1), axis=0)
+    hi_shift = (jnp.uint32(32) - sh) & jnp.uint32(31)
+    hi = jnp.where(sh > 0, w1 << hi_shift, jnp.uint32(0))
+    mask = jnp.uint32((1 << bits) - 1) if bits < 32 else jnp.uint32(0xFFFFFFFF)
+    out_ref[...] = ((w0 >> sh) | hi) & mask
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "interpret"))
+def bitunpack_pallas(words: jax.Array, bits: int, *, interpret: bool = True) -> jax.Array:
+    """Unpack a uint32 word stream into (n_blocks*8192,) uint32 values.
+
+    ``words`` must hold at least ``ceil(n_values*bits/32)`` words padded up to
+    a multiple of ``256*bits`` (the per-block word count); callers slice the
+    result to their true length.
+    """
+    wpb = VALS_PER_BLOCK * bits // 32
+    assert words.shape[0] % wpb == 0, (words.shape, wpb)
+    n_blocks = words.shape[0] // wpb
+    out = pl.pallas_call(
+        functools.partial(_kernel, bits=bits),
+        grid=(n_blocks,),
+        in_specs=[pl.BlockSpec((wpb,), lambda b: (b,))],
+        out_specs=pl.BlockSpec((SUBLANES, LANES), lambda b: (b, 0)),
+        out_shape=jax.ShapeDtypeStruct((n_blocks * SUBLANES, LANES), jnp.uint32),
+        interpret=interpret,
+    )(words)
+    return out.reshape(-1)

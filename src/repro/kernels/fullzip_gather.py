@@ -1,0 +1,49 @@
+"""Pallas TPU kernel: full-zip random-access gather ("take").
+
+The paper's full-zip random access is: look up a row's byte range (repetition
+index / fixed stride) and issue one IOP for the zipped bytes (§4.1.4).  The
+TPU-native translation is a **block-table-driven DMA gather**: row offsets are
+scalar-prefetched and consumed by the input BlockSpec's index_map, so each
+grid step DMAs exactly one zipped row from HBM into VMEM — one "IOP" per row,
+no gather instructions inside the kernel body.  (This is the same mechanism
+paged-attention KV fetch uses; the repetition index plays the block table.)
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["fullzip_gather_pallas"]
+
+
+def _kernel(idx_ref, zipped_ref, out_ref):
+    # the BlockSpec index_map already DMA'd the selected row block; copy out.
+    out_ref[...] = zipped_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def fullzip_gather_pallas(
+    zipped: jax.Array,  # (n_rows, stride) uint8 (stride: control word + value)
+    rows: jax.Array,  # (n_take,) int32 row ids (from the repetition index)
+    *,
+    interpret: bool = True,
+) -> jax.Array:
+    n_take = rows.shape[0]
+    stride = zipped.shape[1]
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(n_take,),
+        in_specs=[pl.BlockSpec((1, stride), lambda i, idx_ref: (idx_ref[i], 0))],
+        out_specs=pl.BlockSpec((1, stride), lambda i, idx_ref: (i, 0)),
+    )
+    return pl.pallas_call(
+        _kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((n_take, stride), zipped.dtype),
+        interpret=interpret,
+    )(rows.astype(jnp.int32), zipped)

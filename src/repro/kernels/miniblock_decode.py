@@ -1,0 +1,98 @@
+"""Pallas TPU kernel: mini-block chunk decode.
+
+One grid step decodes one mini-block chunk (§4.2): unpack the 1-bit
+definition bitmap, unpack the frame-of-reference bit-packed values, and
+scatter them densely (fill at nulls).  Chunk parameters (entry count, value
+bit width, FoR reference) vary per chunk and arrive via scalar prefetch; the
+chunk payloads are padded to a common word count so the BlockSpec tiling is
+static — the mini-block format's power-of-two/8-byte-aligned chunk rules
+(§4.2.1) exist precisely to make this kind of tiling possible.
+
+VMEM budget: a chunk is ≤32 KiB by construction (12-bit word count), plus
+the (4096,)-value output tile — comfortably inside the ~16 MiB VMEM of a
+TPU core even with double buffering.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["miniblock_decode_pallas", "MAX_ENTRIES"]
+
+MAX_ENTRIES = 4096  # the format's per-chunk value ceiling (sec 4.2.1)
+
+
+def _kernel(params_ref, def_ref, val_ref, out_vals_ref, out_valid_ref, *, nullable: bool, fill: int):
+    c = pl.program_id(0)
+    n = params_ref[c, 0]
+    bits = params_ref[c, 1].astype(jnp.uint32)
+    ref = params_ref[c, 2]
+
+    j = (
+        jax.lax.broadcasted_iota(jnp.uint32, (MAX_ENTRIES // 128, 128), 0) * 128
+        + jax.lax.broadcasted_iota(jnp.uint32, (MAX_ENTRIES // 128, 128), 1)
+    ).reshape(-1)
+    in_range = j < n.astype(jnp.uint32)
+    if nullable:
+        dw = def_ref[0, :]
+        w = (j // 32).astype(jnp.int32)
+        d = (jnp.take(dw, w, axis=0) >> (j % 32)) & jnp.uint32(1)
+        valid = (d == 0) & in_range
+    else:
+        valid = in_range
+    vidx = (jnp.cumsum(valid.astype(jnp.int32)) - 1).astype(jnp.uint32)
+    bitpos = jnp.where(valid, vidx, 0) * bits
+    w = (bitpos // 32).astype(jnp.int32)
+    sh = bitpos % 32
+    vw = val_ref[0, :]
+    w0 = jnp.take(vw, w, axis=0)
+    w1 = jnp.take(vw, jnp.minimum(w + 1, vw.shape[0] - 1), axis=0)
+    hi_shift = (jnp.uint32(32) - sh) & jnp.uint32(31)
+    hi = jnp.where(sh > 0, w1 << hi_shift, jnp.uint32(0))
+    mask = jnp.where(bits >= 32, jnp.uint32(0xFFFFFFFF), (jnp.uint32(1) << bits) - jnp.uint32(1))
+    vals = ((w0 >> sh) | hi) & mask
+    out = jnp.where(valid, vals.astype(jnp.int32) + ref, fill)
+    out_vals_ref[...] = out.reshape(MAX_ENTRIES // 128, 128)
+    out_valid_ref[...] = valid.reshape(MAX_ENTRIES // 128, 128)
+
+
+@functools.partial(jax.jit, static_argnames=("nullable", "fill", "interpret"))
+def miniblock_decode_pallas(
+    def_words: jax.Array,  # (C, DW) uint32
+    val_words: jax.Array,  # (C, VW) uint32
+    params: jax.Array,  # (C, 3) int32: [n_entries, vbits, ref]
+    *,
+    nullable: bool,
+    fill: int = 0,
+    interpret: bool = True,
+):
+    C, DW = def_words.shape
+    VW = val_words.shape[1]
+    R = MAX_ENTRIES // 128
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(C,),
+        in_specs=[
+            pl.BlockSpec((1, DW), lambda c, p: (c, 0)),
+            pl.BlockSpec((1, VW), lambda c, p: (c, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((R, 128), lambda c, p: (c, 0)),
+            pl.BlockSpec((R, 128), lambda c, p: (c, 0)),
+        ],
+    )
+    vals, valid = pl.pallas_call(
+        functools.partial(_kernel, nullable=nullable, fill=fill),
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((C * R, 128), jnp.int32),
+            jax.ShapeDtypeStruct((C * R, 128), jnp.bool_),
+        ],
+        interpret=interpret,
+    )(params, def_words, val_words)
+    return vals.reshape(C, MAX_ENTRIES), valid.reshape(C, MAX_ENTRIES)

@@ -1,0 +1,81 @@
+"""Public jit'd kernel entry points.
+
+Each op dispatches to the Pallas TPU kernel (interpret=True on CPU so the
+kernel *body* is what executes) or to the pure-jnp oracle in ``ref.py``.
+On a real TPU backend ``interpret`` flips to False and the same code lowers
+to Mosaic.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import ref
+from .bitunpack import VALS_PER_BLOCK, bitunpack_pallas
+from .fullzip_gather import fullzip_gather_pallas
+from .miniblock_decode import MAX_ENTRIES, miniblock_decode_pallas
+
+__all__ = [
+    "bitunpack",
+    "miniblock_decode",
+    "fullzip_gather",
+    "pack_words",
+    "on_tpu",
+]
+
+
+def on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def pack_words(buf: np.ndarray, pad_words: int = 1) -> np.ndarray:
+    """uint8 packed stream -> uint32 little-endian words (host helper)."""
+    b = np.asarray(buf, np.uint8)
+    pad = (-len(b)) % 4
+    b = np.pad(b, (0, pad))
+    w = b.view(np.uint32)
+    if pad_words:
+        w = np.pad(w, (0, pad_words))
+    return w
+
+
+def bitunpack(words: jax.Array, n: int, bits: int, *, use_pallas: bool = True) -> jax.Array:
+    """Unpack ``n`` ``bits``-wide values from a uint32 word stream."""
+    if not use_pallas:
+        return ref.bitunpack_ref(words, n, bits)
+    wpb = VALS_PER_BLOCK * bits // 32
+    n_blocks = max(1, -(-n // VALS_PER_BLOCK))
+    need = n_blocks * wpb
+    w = jnp.pad(words, (0, max(0, need - words.shape[0])))[:need]
+    out = bitunpack_pallas(w, bits, interpret=not on_tpu())
+    return out[:n]
+
+
+def miniblock_decode(
+    def_words: jax.Array,
+    val_words: jax.Array,
+    params: jax.Array,
+    *,
+    nullable: bool,
+    fill: int = 0,
+    use_pallas: bool = True,
+):
+    """Decode C mini-block chunks -> ((C, 4096) int32, (C, 4096) bool)."""
+    if not use_pallas:
+        return ref.miniblock_decode_ref(
+            def_words, val_words, params[:, 0], params[:, 1], params[:, 2],
+            MAX_ENTRIES, nullable, fill,
+        )
+    return miniblock_decode_pallas(
+        def_words, val_words, params, nullable=nullable, fill=fill,
+        interpret=not on_tpu(),
+    )
+
+
+def fullzip_gather(zipped: jax.Array, rows: jax.Array, *, use_pallas: bool = True) -> jax.Array:
+    """Gather zipped fixed-stride rows (the §4.1 take path)."""
+    if not use_pallas:
+        return ref.fullzip_gather_ref(zipped, rows)
+    return fullzip_gather_pallas(zipped, rows, interpret=not on_tpu())

@@ -1,0 +1,327 @@
+"""Attention variants: GQA (+QKV bias), MLA (DeepSeek kv-LoRA), gated
+cross-attention (VLM), plus a memory-bounded blockwise ("flash") attention
+used for long prefills and a KV-cache decode path.
+
+Decode KV caches are stored with the head/feature dims flattened
+(``Hkv*head_dim``) so their sharded dimension is divisible by the 16-wide
+model axis even when ``n_kv_heads`` is not (e.g. kv=8 or kv=5).
+For ``long_500k`` (batch 1) the cache shards its *sequence* dimension over
+the data axis; the softmax reductions below then lower to the
+flash-decoding partial-softmax combine via GSPMD (all-reduce of max/sum).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from .common import DP, TP, apply_rope, dense_init, rope_freqs
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# blockwise attention (training / prefill)
+# ---------------------------------------------------------------------------
+
+
+def flash_attention(
+    q: jax.Array,  # (B, Sq, H, D)
+    k: jax.Array,  # (B, Sk, Hkv, D)
+    v: jax.Array,  # (B, Sk, Hkv, Dv)
+    *,
+    causal: bool,
+    q_chunk: int = 2048,
+    k_chunk: int = 2048,
+    scale: Optional[float] = None,
+    kv_len: Optional[jax.Array] = None,  # mask k positions >= kv_len
+) -> jax.Array:
+    """Online-softmax blockwise attention (O(S) memory, exact).
+
+    The causal mask is applied inside each (q-block, k-block) tile; fully
+    masked tiles still compute (static shapes) — trimming them is a §Perf
+    hillclimb item tracked in EXPERIMENTS.md.
+    """
+    B, Sq, H, D = q.shape
+    Sk, Hkv, Dv = k.shape[1], k.shape[2], v.shape[3]
+    G = H // Hkv
+    scale = scale if scale is not None else D ** -0.5
+    q_chunk = min(q_chunk, Sq)
+    k_chunk = min(k_chunk, Sk)
+    nq, nk = Sq // q_chunk, Sk // k_chunk
+    assert Sq % q_chunk == 0 and Sk % k_chunk == 0
+
+    qr = q.reshape(B, nq, q_chunk, Hkv, G, D)
+    kr = k.reshape(B, nk, k_chunk, Hkv, D)
+    vr = v.reshape(B, nk, k_chunk, Hkv, Dv)
+
+    def per_q(qi, qblk):  # qblk (B, qc, Hkv, G, D)
+        m0 = jnp.full((B, q_chunk, Hkv, G), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, q_chunk, Hkv, G), jnp.float32)
+        a0 = jnp.zeros((B, q_chunk, Hkv, G, Dv), jnp.float32)
+
+        def body(carry, ki):
+            m, l, acc = carry
+            kblk = kr[:, ki]
+            vblk = vr[:, ki]
+            s = jnp.einsum("bqhgd,bkhd->bqhgk", qblk, kblk,
+                           preferred_element_type=jnp.float32) * scale
+            ik = ki * k_chunk + jnp.arange(k_chunk)
+            if causal:
+                # additive 2-D bias instead of a 6-D select: XLA hoisted the
+                # broadcast pred array out of the scan (GiB-scale HBM traffic,
+                # EXPERIMENTS.md §Perf A1); the (qc, kc) f32 bias fuses.
+                iq = qi * q_chunk + jnp.arange(q_chunk)
+                bias = jnp.where(iq[:, None] >= ik[None, :], 0.0, NEG_INF)
+                s = s + bias[None, :, None, None, :]
+            if kv_len is not None:
+                s = s + jnp.where(ik < kv_len, 0.0, NEG_INF)[None, None, None, None, :]
+            mn = jnp.maximum(m, s.max(axis=-1))
+            p = jnp.exp(s - mn[..., None])
+            corr = jnp.exp(m - mn)
+            l2 = l * corr + p.sum(axis=-1)
+            acc2 = acc * corr[..., None] + jnp.einsum(
+                "bqhgk,bkhd->bqhgd", p.astype(v.dtype), vblk,
+                preferred_element_type=jnp.float32)
+            return (mn, l2, acc2), None
+
+        # nested remat: without it, AD of the scan saves every block's f32
+        # score/probability tensors as residuals (TiB-scale HBM traffic at
+        # 32K context — §Perf A1).  Recomputing s/p per block in backward is
+        # the flash-attention backward.
+        (m, l, acc), _ = jax.lax.scan(jax.checkpoint(body), (m0, l0, a0),
+                                      jnp.arange(nk))
+        return (acc / jnp.maximum(l, 1e-30)[..., None]).astype(q.dtype)
+
+    out = jax.lax.map(lambda args: per_q(*args),
+                      (jnp.arange(nq), jnp.moveaxis(qr, 1, 0)))
+    # out: (nq, B, qc, Hkv, G, Dv)
+    out = jnp.moveaxis(out, 0, 1).reshape(B, Sq, H, Dv)
+    return out
+
+
+def decode_attention(
+    q: jax.Array,  # (B, 1, H, D)
+    k_cache: jax.Array,  # (B, S, Hkv, D)
+    v_cache: jax.Array,  # (B, S, Hkv, Dv)
+    length: jax.Array,  # (B,) valid cache lengths
+    scale: Optional[float] = None,
+) -> jax.Array:
+    B, _, H, D = q.shape
+    S, Hkv = k_cache.shape[1], k_cache.shape[2]
+    G = H // Hkv
+    scale = scale if scale is not None else D ** -0.5
+    qg = q.reshape(B, Hkv, G, D)
+    s = jnp.einsum("bhgd,bshd->bhgs", qg, k_cache,
+                   preferred_element_type=jnp.float32) * scale
+    mask = jnp.arange(S)[None, :] < length[:, None]
+    s = jnp.where(mask[:, None, None, :], s, NEG_INF)
+    # softmax over (possibly seq-sharded) S: GSPMD lowers the max/sum
+    # reductions to the flash-decoding combine when S is sharded.
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgs,bshd->bhgd", p.astype(v_cache.dtype), v_cache,
+                   preferred_element_type=jnp.float32)
+    return o.reshape(B, 1, H, v_cache.shape[3]).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# GQA
+# ---------------------------------------------------------------------------
+
+
+def init_gqa(key, cfg, dtype):
+    d, H, Hkv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 4)
+    pq, sq = dense_init(ks[0], d, H * hd, dtype, bias=cfg.qkv_bias, in_axis=DP)
+    pk, sk = dense_init(ks[1], d, Hkv * hd, dtype, bias=cfg.qkv_bias, in_axis=DP)
+    pv, sv = dense_init(ks[2], d, Hkv * hd, dtype, bias=cfg.qkv_bias, in_axis=DP)
+    po, so = dense_init(ks[3], H * hd, d, dtype, in_axis=TP, out_axis=DP)
+    return (
+        {"q": pq, "k": pk, "v": pv, "o": po},
+        {"q": sq, "k": sk, "v": sv, "o": so},
+    )
+
+
+def _proj(p, x):
+    y = jnp.einsum("bsd,df->bsf", x, p["w"])
+    if "b" in p:
+        y = y + p["b"]
+    return y
+
+
+def gqa_apply(
+    params,
+    cfg,
+    x: jax.Array,  # (B, S, d)
+    positions: jax.Array,  # (B, S)
+    mode: str,  # train | prefill | decode
+    cache: Optional[Dict] = None,
+):
+    B, S, d = x.shape
+    H, Hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = _proj(params["q"], x).reshape(B, S, H, hd)
+    k = _proj(params["k"], x).reshape(B, S, Hkv, hd)
+    v = _proj(params["v"], x).reshape(B, S, Hkv, hd)
+    cos, sin = rope_freqs(hd, cfg.rope_theta, positions)  # (B,S,hd/2)
+    q = apply_rope(q, cos[:, :, None, :], sin[:, :, None, :])
+    k = apply_rope(k, cos[:, :, None, :], sin[:, :, None, :])
+
+    new_cache = None
+    if mode == "decode":
+        assert cache is not None and S == 1
+        kc = cache["k"].reshape(B, -1, Hkv, hd)
+        vc = cache["v"].reshape(B, -1, Hkv, hd)
+        idx = cache["length"]  # scalar (global decode position)
+        kc = jax.lax.dynamic_update_slice_in_dim(kc, k, idx, axis=1)
+        vc = jax.lax.dynamic_update_slice_in_dim(vc, v, idx, axis=1)
+        o = decode_attention(q, kc, vc, jnp.full((B,), idx + 1))
+        new_cache = {
+            "k": kc.reshape(B, -1, Hkv * hd),
+            "v": vc.reshape(B, -1, Hkv * hd),
+        }
+    else:
+        # mode "encode" (enc-dec encoder) is bidirectional
+        o = flash_attention(q, k, v, causal=(mode != "encode"))
+        if mode == "prefill":
+            new_cache = {
+                "k": k.reshape(B, S, Hkv * hd),
+                "v": v.reshape(B, S, Hkv * hd),
+            }
+    out = jnp.einsum("bsf,fd->bsd", o.reshape(B, S, H * hd), params["o"]["w"])
+    return out, new_cache
+
+
+def gqa_cache_spec(cfg, batch_sharded: bool):
+    """PartitionSpec for the per-layer KV cache (stacked later)."""
+    if batch_sharded:
+        bs = P(DP, None, TP)
+    else:  # long-context single-request: shard the sequence dim (SP)
+        bs = P(None, "data", TP)
+    return {"k": bs, "v": bs}
+
+
+# ---------------------------------------------------------------------------
+# MLA (DeepSeek-V2 multi-head latent attention)
+# ---------------------------------------------------------------------------
+
+
+def init_mla(key, cfg, dtype):
+    m = cfg.mla
+    d, H = cfg.d_model, cfg.n_heads
+    dn, dr, dv, r = m.qk_nope_dim, m.qk_rope_dim, m.v_head_dim, m.kv_lora_rank
+    ks = jax.random.split(key, 5)
+    pq, sq = dense_init(ks[0], d, H * (dn + dr), dtype, in_axis=DP)
+    pdkv, sdkv = dense_init(ks[1], d, r + dr, dtype, in_axis=DP, out_axis=None)
+    puk, suk = dense_init(ks[2], r, H * dn, dtype, in_axis=None, out_axis=TP)
+    puv, suv = dense_init(ks[3], r, H * dv, dtype, in_axis=None, out_axis=TP)
+    po, so = dense_init(ks[4], H * dv, d, dtype, in_axis=TP, out_axis=DP)
+    return (
+        {"q": pq, "dkv": pdkv, "uk": puk, "uv": puv, "o": po},
+        {"q": sq, "dkv": sdkv, "uk": suk, "uv": suv, "o": so},
+    )
+
+
+def mla_apply(params, cfg, x, positions, mode, cache=None):
+    m = cfg.mla
+    B, S, d = x.shape
+    H = cfg.n_heads
+    dn, dr, dv, r = m.qk_nope_dim, m.qk_rope_dim, m.v_head_dim, m.kv_lora_rank
+    q = _proj(params["q"], x).reshape(B, S, H, dn + dr)
+    qn, qr = q[..., :dn], q[..., dn:]
+    ckv_pe = _proj(params["dkv"], x)  # (B, S, r + dr)
+    ckv, kpe = ckv_pe[..., :r], ckv_pe[..., r:]
+    cos, sin = rope_freqs(dr, cfg.rope_theta, positions)
+    qr = apply_rope(qr, cos[:, :, None, :], sin[:, :, None, :])
+    kpe = apply_rope(kpe[:, :, None, :], cos[:, :, None, :], sin[:, :, None, :])[:, :, 0]
+
+    wuk = params["uk"]["w"].reshape(r, H, dn)
+    wuv = params["uv"]["w"].reshape(r, H, dv)
+    scale = (dn + dr) ** -0.5
+
+    if mode == "decode":
+        assert cache is not None and S == 1
+        idx = cache["length"]
+        ckv_c = jax.lax.dynamic_update_slice_in_dim(cache["ckv"], ckv, idx, axis=1)
+        kpe_c = jax.lax.dynamic_update_slice_in_dim(cache["kpe"], kpe, idx, axis=1)
+        Sc = ckv_c.shape[1]
+        # absorbed form: score = (qn . Wuk) . ckv + qr . kpe
+        q_abs = jnp.einsum("bhn,rhn->bhr", qn[:, 0], wuk,
+                           preferred_element_type=jnp.float32)
+        s = (
+            jnp.einsum("bhr,bsr->bhs", q_abs, ckv_c.astype(jnp.float32))
+            + jnp.einsum("bhe,bse->bhs", qr[:, 0].astype(jnp.float32),
+                         kpe_c.astype(jnp.float32))
+        ) * scale
+        mask = jnp.arange(Sc)[None, :] < (idx + 1)
+        s = jnp.where(mask[:, None, :], s, NEG_INF)
+        p = jax.nn.softmax(s, axis=-1)
+        o_c = jnp.einsum("bhs,bsr->bhr", p, ckv_c.astype(jnp.float32))
+        o = jnp.einsum("bhr,rhv->bhv", o_c, wuv.astype(jnp.float32))
+        o = o.reshape(B, 1, H * dv).astype(x.dtype)
+        new_cache = {"ckv": ckv_c, "kpe": kpe_c}
+    else:
+        kn = jnp.einsum("bsr,rhn->bshn", ckv, wuk)
+        vv = jnp.einsum("bsr,rhv->bshv", ckv, wuv)
+        qcat = jnp.concatenate([qn, qr], axis=-1)
+        kcat = jnp.concatenate([kn, jnp.broadcast_to(kpe[:, :, None, :], (B, S, H, dr))], axis=-1)
+        o = flash_attention(qcat, kcat, vv, causal=(mode != "encode"), scale=scale)
+        o = o.reshape(B, S, H * dv)
+        new_cache = {"ckv": ckv, "kpe": kpe} if mode == "prefill" else None
+    out = jnp.einsum("bsf,fd->bsd", o, params["o"]["w"])
+    return out, new_cache
+
+
+def mla_cache_spec(cfg, batch_sharded: bool):
+    if batch_sharded:
+        return {"ckv": P(DP, None, None), "kpe": P(DP, None, None)}
+    return {"ckv": P(None, "data", None), "kpe": P(None, "data", None)}
+
+
+# ---------------------------------------------------------------------------
+# Gated cross-attention (Llama-3.2-Vision style)
+# ---------------------------------------------------------------------------
+
+
+def init_cross_attn(key, cfg, dtype):
+    d, H, hd = cfg.d_model, cfg.n_heads, cfg.head_dim
+    Hkv = cfg.n_kv_heads
+    ks = jax.random.split(key, 4)
+    pq, sq = dense_init(ks[0], d, H * hd, dtype, in_axis=DP)
+    pk, sk = dense_init(ks[1], d, Hkv * hd, dtype, in_axis=DP)
+    pv, sv = dense_init(ks[2], d, Hkv * hd, dtype, in_axis=DP)
+    po, so = dense_init(ks[3], H * hd, d, dtype, in_axis=TP, out_axis=DP)
+    params = {"q": pq, "k": pk, "v": pv, "o": po,
+              "gate": jnp.zeros((), dtype=jnp.float32)}
+    specs = {"q": sq, "k": sk, "v": sv, "o": so, "gate": P()}
+    return params, specs
+
+
+def cross_attn_apply(params, cfg, x, vis_tokens, mode, cache=None):
+    """x: (B, S, d) text; vis_tokens: (B, Nv, d) projected vision embeddings."""
+    B, S, d = x.shape
+    H, Hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = _proj(params["q"], x).reshape(B, S, H, hd)
+    if cache is not None and mode == "decode":
+        k = cache["k"].reshape(B, -1, Hkv, hd)
+        v = cache["v"].reshape(B, -1, Hkv, hd)
+        new_cache = cache
+    else:
+        k = _proj(params["k"], vis_tokens).reshape(B, -1, Hkv, hd)
+        v = _proj(params["v"], vis_tokens).reshape(B, -1, Hkv, hd)
+        Nv = k.shape[1]
+        new_cache = {"k": k.reshape(B, Nv, Hkv * hd), "v": v.reshape(B, Nv, Hkv * hd)}
+    # pad the (1601-ish) vision token axis up to a tile multiple and mask
+    Nv = k.shape[1]
+    pad = (-Nv) % 128
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    o = flash_attention(q, k, v, causal=False, q_chunk=2048,
+                        k_chunk=128, kv_len=jnp.int32(Nv))
+    o = jnp.einsum("bsf,fd->bsd", o.reshape(B, S, H * hd), params["o"]["w"])
+    gate = jnp.tanh(params["gate"]).astype(x.dtype)
+    return o * gate, new_cache

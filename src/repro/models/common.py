@@ -1,0 +1,105 @@
+"""Shared model building blocks.
+
+Parameters are plain nested dicts of jnp arrays; every ``init_*`` function
+returns ``(params, specs)`` where ``specs`` is a structurally identical tree
+of :class:`jax.sharding.PartitionSpec`.  Sharding axis conventions
+(DESIGN.md §5):
+
+* ``"dp"`` placeholder resolves to ``("pod", "data")`` (or ``("data",)`` on a
+  single pod) — data parallel / FSDP.
+* ``"tp"`` resolves to ``"model"`` — tensor parallel.
+
+Weights shard their *flattened feature* dimensions (e.g. ``n_heads *
+head_dim``), which are divisible by the 16-wide model axis for every
+assigned architecture even when the head count itself is not (GSPMD pads
+uneven intermediate shardings, but argument shardings must divide evenly).
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+__all__ = [
+    "DP", "TP", "dense_init", "rmsnorm_init", "embed_init",
+    "rmsnorm", "rope_freqs", "apply_rope", "dtype_of", "stack_layers",
+]
+
+# logical axis tokens resolved by repro.dist.sharding.resolve_spec
+DP = "__dp__"
+TP = "__tp__"
+
+
+def dtype_of(cfg) -> jnp.dtype:
+    return jnp.dtype(cfg.dtype)
+
+
+def dense_init(key, d_in: int, d_out: int, dtype, bias: bool = False,
+               in_axis=None, out_axis=TP, scale: Optional[float] = None):
+    """Linear layer params + specs.  Default: column parallel (out on TP)."""
+    scale = scale if scale is not None else (1.0 / (d_in ** 0.5))
+    w = jax.random.normal(key, (d_in, d_out), dtype=jnp.float32) * scale
+    params = {"w": w.astype(dtype)}
+    specs = {"w": P(in_axis, out_axis)}
+    if bias:
+        params["b"] = jnp.zeros((d_out,), dtype=dtype)
+        specs["b"] = P(out_axis)
+    return params, specs
+
+
+def rmsnorm_init(d: int, dtype) -> Tuple[Dict, Dict]:
+    return {"scale": jnp.ones((d,), dtype=dtype)}, {"scale": P(None)}
+
+
+def embed_init(key, vocab: int, d: int, dtype) -> Tuple[Dict, Dict]:
+    w = jax.random.normal(key, (vocab, d), dtype=jnp.float32) * 0.02
+    return {"w": w.astype(dtype)}, {"w": P(TP, None)}
+
+
+def rmsnorm(x: jax.Array, scale: jax.Array, eps: float) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    return (x * jax.lax.rsqrt(var + eps)).astype(dt) * scale
+
+
+def rope_freqs(head_dim: int, theta: float, positions: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """positions (...,) -> cos/sin of shape (..., head_dim//2), f32."""
+    half = head_dim // 2
+    inv = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    ang = positions.astype(jnp.float32)[..., None] * inv
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jax.Array, cos: jax.Array, sin: jax.Array) -> jax.Array:
+    """x: (..., H, head_dim); cos/sin broadcastable to (..., 1, head_dim//2)."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    xf1, xf2 = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    out = jnp.concatenate([xf1 * cos - xf2 * sin, xf2 * cos + xf1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def stack_layers(init_one, key, n_layers: int):
+    """vmap an init function over layer keys -> stacked (L, ...) params.
+
+    Returns (params, specs) where specs gain a leading None axis.
+    """
+    keys = jax.random.split(key, n_layers)
+    _, specs = init_one(keys[0])
+    params = jax.vmap(init_one_params(init_one))(keys)
+    specs = jax.tree.map(
+        lambda s: P(None, *s), specs, is_leaf=lambda s: isinstance(s, P)
+    )
+    return params, specs
+
+
+def init_one_params(init_one):
+    def f(k):
+        p, _ = init_one(k)
+        return p
+
+    return f

@@ -1,0 +1,265 @@
+"""Architecture registry: config -> model builder, input specs, cache specs.
+
+``input_specs`` returns ``ShapeDtypeStruct`` stand-ins (no allocation) plus
+activation PartitionSpecs for every model input of a given (arch, shape)
+cell — the dry-run lowers against these.  Modality frontends are stubs per
+the task spec: the VLM receives precomputed patch embeddings, the audio
+model precomputed frame embeddings.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from ..configs.base import ModelConfig, ShapeCfg
+from .attention import gqa_cache_spec, mla_cache_spec
+from .common import DP, TP
+from .ssm import mamba2_cache_spec
+from .transformer import LMModel
+
+__all__ = ["build_model", "input_specs", "cache_specs", "supports_shape", "model_flops"]
+
+
+def build_model(cfg: ModelConfig, mesh=None, batch_axes=("data",),
+                data_size: int = 16, use_sharded_moe: bool = False) -> LMModel:
+    return LMModel(cfg, data_size=data_size, use_sharded_moe=use_sharded_moe,
+                   batch_axes=tuple(batch_axes), mesh=mesh)
+
+
+def supports_shape(cfg: ModelConfig, shape: ShapeCfg) -> Tuple[bool, str]:
+    """long_500k requires sub-quadratic sequence mixing (task spec)."""
+    if shape.name == "long_500k" and not cfg.subquadratic:
+        return False, "skipped: pure full-attention arch at 500K context (DESIGN.md)"
+    return True, ""
+
+
+# ---------------------------------------------------------------------------
+# inputs
+# ---------------------------------------------------------------------------
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeCfg) -> Dict[str, Tuple[jax.ShapeDtypeStruct, P]]:
+    B, S = shape.global_batch, shape.seq_len
+    dp = P(DP)
+    out: Dict[str, Tuple[jax.ShapeDtypeStruct, P]] = {}
+    if shape.kind == "train":
+        out["tokens"] = (jax.ShapeDtypeStruct((B, S + 1), jnp.int32), P(DP, None))
+    elif shape.kind == "prefill":
+        out["tokens"] = (jax.ShapeDtypeStruct((B, S), jnp.int32), P(DP, None))
+    else:  # decode: one new token against a cache of length S
+        out["tokens"] = (jax.ShapeDtypeStruct((B, 1), jnp.int32), P(DP, None))
+    if cfg.family == "vlm" and shape.kind != "decode":
+        out["vision_embeds"] = (
+            jax.ShapeDtypeStruct((B, cfg.n_vision_tokens, cfg.d_vision), jnp.dtype(cfg.dtype)),
+            P(DP, None, None),
+        )
+    if cfg.family == "audio" and shape.kind != "decode":
+        out["frames"] = (
+            jax.ShapeDtypeStruct((B, S, cfg.d_audio), jnp.dtype(cfg.dtype)),
+            P(DP, None, None),
+        )
+    return out
+
+
+# ---------------------------------------------------------------------------
+# caches (for decode dry-runs and the serving engine)
+# ---------------------------------------------------------------------------
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), jnp.dtype(dtype))
+
+
+def cache_specs(cfg: ModelConfig, shape: ShapeCfg, dp_total: int):
+    """Returns (ShapeDtypeStruct tree, PartitionSpec tree) for the decode cache.
+
+    ``dp_total``: number of chips on the batch axes — batches smaller than it
+    flip the cache to sequence sharding (SP / flash-decoding combine).
+    """
+    B, S = shape.global_batch, shape.seq_len
+    L = cfg.n_layers
+    dt = cfg.dtype
+    batch_sharded = B >= dp_total and B % dp_total == 0
+
+    def seq_or_batch(spec_batch: P, spec_seq: P) -> P:
+        return spec_batch if batch_sharded else spec_seq
+
+    if cfg.family in ("dense", "moe"):
+        if cfg.mla is not None:
+            m = cfg.mla
+            shapes = {"layers": {"ckv": _sds((L, B, S, m.kv_lora_rank), dt),
+                                 "kpe": _sds((L, B, S, m.qk_rope_dim), dt)},
+                      "length": _sds((), jnp.int32)}
+            lspec = mla_cache_spec(cfg, batch_sharded)
+            specs = {"layers": {k: P(None, *v) for k, v in lspec.items()},
+                     "length": P()}
+            return shapes, specs
+        f = cfg.n_kv_heads * cfg.head_dim
+        shapes = {"layers": {"k": _sds((L, B, S, f), dt), "v": _sds((L, B, S, f), dt)},
+                  "length": _sds((), jnp.int32)}
+        lspec = gqa_cache_spec(cfg, batch_sharded)
+        specs = {"layers": {k: P(None, *v) for k, v in lspec.items()}, "length": P()}
+        return shapes, specs
+
+    if cfg.family == "ssm":
+        s = cfg.ssm
+        H, Pd, N = cfg.ssm_heads, s.head_dim, s.d_state
+        di, GN = cfg.d_inner, s.n_groups * s.d_state
+        shapes = {"layers": {
+            "state": _sds((L, B, H, N, Pd), jnp.float32),
+            "conv": {"x": _sds((L, B, s.d_conv - 1, di), dt),
+                     "B": _sds((L, B, s.d_conv - 1, GN), dt),
+                     "C": _sds((L, B, s.d_conv - 1, GN), dt)}},
+            "length": _sds((), jnp.int32)}
+        lspec = mamba2_cache_spec(cfg, batch_sharded)
+        specs = {"layers": jax.tree.map(lambda v: P(None, *v), lspec,
+                                        is_leaf=lambda v: isinstance(v, P)),
+                 "length": P()}
+        return shapes, specs
+
+    if cfg.family == "hybrid":
+        s = cfg.ssm
+        H, Pd, N = cfg.ssm_heads, s.head_dim, s.d_state
+        di, GN = cfg.d_inner, s.n_groups * s.d_state
+        n_shared = cfg.n_layers // cfg.shared_attn_every
+        f = cfg.n_kv_heads * cfg.head_dim
+        shapes = {
+            "mamba": {"state": _sds((L, B, H, N, Pd), jnp.float32),
+                      "conv": {"x": _sds((L, B, s.d_conv - 1, di), dt),
+                               "B": _sds((L, B, s.d_conv - 1, GN), dt),
+                               "C": _sds((L, B, s.d_conv - 1, GN), dt)}},
+            "shared": {"k": _sds((n_shared, B, S, f), dt),
+                       "v": _sds((n_shared, B, S, f), dt)},
+            "length": _sds((), jnp.int32),
+        }
+        mspec = mamba2_cache_spec(cfg, batch_sharded)
+        aspec = gqa_cache_spec(cfg, batch_sharded)
+        specs = {
+            "mamba": jax.tree.map(lambda v: P(None, *v), mspec,
+                                  is_leaf=lambda v: isinstance(v, P)),
+            "shared": {k: P(None, *v) for k, v in aspec.items()},
+            "length": P(),
+        }
+        return shapes, specs
+
+    if cfg.family == "vlm":
+        n_cross = cfg.n_layers // cfg.cross_attn_every
+        per = cfg.cross_attn_every - 1
+        f = cfg.n_kv_heads * cfg.head_dim
+        Nv = cfg.n_vision_tokens
+        aspec = gqa_cache_spec(cfg, batch_sharded)
+        shapes = {
+            "self": {"k": _sds((n_cross, per, B, S, f), dt),
+                     "v": _sds((n_cross, per, B, S, f), dt)},
+            "cross": {"k": _sds((n_cross, B, Nv, f), dt),
+                      "v": _sds((n_cross, B, Nv, f), dt)},
+            "length": _sds((), jnp.int32),
+        }
+        specs = {
+            "self": {k: P(None, None, *v) for k, v in aspec.items()},
+            "cross": {k: P(None, *v) for k, v in aspec.items()},
+            "length": P(),
+        }
+        return shapes, specs
+
+    if cfg.family == "audio":
+        L = cfg.n_dec_layers
+        f = cfg.n_kv_heads * cfg.head_dim
+        aspec = gqa_cache_spec(cfg, batch_sharded)
+        shapes = {
+            "self": {"k": _sds((L, B, S, f), dt), "v": _sds((L, B, S, f), dt)},
+            "cross": {"k": _sds((L, B, S, f), dt), "v": _sds((L, B, S, f), dt)},
+            "length": _sds((), jnp.int32),
+        }
+        specs = {
+            "self": {k: P(None, *v) for k, v in aspec.items()},
+            "cross": {k: P(None, *v) for k, v in aspec.items()},
+            "length": P(),
+        }
+        return shapes, specs
+
+    raise ValueError(cfg.family)
+
+
+# ---------------------------------------------------------------------------
+# analytic parameter / FLOP counts (for §Roofline MODEL_FLOPS)
+# ---------------------------------------------------------------------------
+
+
+def param_counts(cfg: ModelConfig) -> Tuple[int, int]:
+    """(total_params, active_params) — active differs for MoE."""
+    d, ff, V = cfg.d_model, cfg.d_ff, cfg.vocab
+    H, Hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    embed = V * d * (1 if cfg.tie_embeddings else 2)
+
+    def attn_params():
+        if cfg.mla is not None:
+            m = cfg.mla
+            return (d * H * (m.qk_nope_dim + m.qk_rope_dim)
+                    + d * (m.kv_lora_rank + m.qk_rope_dim)
+                    + m.kv_lora_rank * H * (m.qk_nope_dim + m.v_head_dim)
+                    + H * m.v_head_dim * d)
+        return d * H * hd * 2 + d * Hkv * hd * 2
+
+    def mlp_params(f=ff):
+        return 3 * d * f
+
+    def mamba_params():
+        s = cfg.ssm
+        di, GN, Hs = cfg.d_inner, s.n_groups * s.d_state, cfg.ssm_heads
+        return 2 * d * di + 2 * d * GN + d * Hs + di * d + s.d_conv * (di + 2 * GN)
+
+    total = active = embed
+    fam = cfg.family
+    if fam == "dense":
+        per = attn_params() + mlp_params()
+        total += cfg.n_layers * per
+        active = total
+    elif fam == "moe":
+        m = cfg.moe
+        routed = 3 * d * m.d_ff_expert
+        shared = 3 * d * (m.d_ff_shared or 0) * m.n_shared if m.n_shared else 0
+        per_total = attn_params() + m.n_experts * routed + shared + d * m.n_experts
+        per_active = attn_params() + m.top_k * routed + shared + d * m.n_experts
+        total += cfg.n_layers * per_total
+        active += cfg.n_layers * per_active
+    elif fam == "ssm":
+        total += cfg.n_layers * mamba_params()
+        active = total
+    elif fam == "hybrid":
+        total += cfg.n_layers * mamba_params()
+        total += attn_params() + mlp_params()  # shared block counted once
+        # but APPLIED n_shared times: active compute counts applications
+        n_shared = cfg.n_layers // cfg.shared_attn_every
+        active = embed + cfg.n_layers * mamba_params() + n_shared * (attn_params() + mlp_params())
+    elif fam == "vlm":
+        n_cross = cfg.n_layers // cfg.cross_attn_every
+        n_self = cfg.n_layers - n_cross
+        total += n_self * (attn_params() + mlp_params())
+        total += n_cross * (attn_params() + mlp_params())
+        total += cfg.d_vision * d
+        active = total
+    elif fam == "audio":
+        total += cfg.n_enc_layers * (attn_params() + mlp_params())
+        total += cfg.n_dec_layers * (2 * attn_params() + mlp_params())
+        total += cfg.d_audio * d
+        active = total
+    return int(total), int(active)
+
+
+def model_flops(cfg: ModelConfig, shape: ShapeCfg) -> float:
+    """MODEL_FLOPS = 6·N·D (dense) / 6·N_active·D (MoE) for train;
+    2·N·D for prefill; 2·N_active per token for decode."""
+    total, active = param_counts(cfg)
+    tokens = shape.global_batch * shape.seq_len
+    if shape.kind == "train":
+        return 6.0 * active * tokens
+    if shape.kind == "prefill":
+        return 2.0 * active * tokens
+    return 2.0 * active * shape.global_batch  # decode: one token per request

@@ -1,0 +1,203 @@
+"""Mamba2 (SSD — state-space duality) sequence mixer.
+
+Implements the chunked SSD algorithm (arXiv:2405.21060): within chunks of
+length Q the computation is an attention-like quadratic form with decay
+mask; across chunks a linear recurrence carries the (H, P, N) state.  Decode
+is a single-step state update — the "KV cache" of an SSM is its fixed-width
+state, which is why ``long_500k`` runs on SSM/hybrid archs only (DESIGN.md).
+
+Projections are split (z/x/B/C/dt) rather than fused so every sharded
+feature dim (d_inner, heads) divides the 16-wide model axis cleanly.
+f32 internals for the cumulative decays.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from .common import DP, TP, dense_init
+
+__all__ = ["init_mamba2", "mamba2_apply", "mamba2_cache_spec"]
+
+
+def init_mamba2(key, cfg, dtype):
+    s = cfg.ssm
+    d, di = cfg.d_model, cfg.d_inner
+    H = cfg.ssm_heads
+    GN = s.n_groups * s.d_state
+    ks = jax.random.split(key, 8)
+    pz, sz = dense_init(ks[0], d, di, dtype, in_axis=DP)
+    px, sx = dense_init(ks[1], d, di, dtype, in_axis=DP)
+    pB, sB = dense_init(ks[2], d, GN, dtype, in_axis=DP, out_axis=None)
+    pC, sC = dense_init(ks[3], d, GN, dtype, in_axis=DP, out_axis=None)
+    pdt, sdt = dense_init(ks[4], d, H, dtype, in_axis=DP, out_axis=TP)
+    po, so = dense_init(ks[5], di, d, dtype, in_axis=TP, out_axis=DP)
+    params = {
+        "in_z": pz, "in_x": px, "in_B": pB, "in_C": pC, "in_dt": pdt,
+        "out": po,
+        "conv_x": {"w": (jax.random.normal(ks[6], (s.d_conv, di), jnp.float32) * 0.1).astype(dtype),
+                   "b": jnp.zeros((di,), dtype)},
+        "conv_B": {"w": (jax.random.normal(ks[7], (s.d_conv, GN), jnp.float32) * 0.1).astype(dtype),
+                   "b": jnp.zeros((GN,), dtype)},
+        "conv_C": {"w": (jax.random.normal(jax.random.fold_in(ks[7], 1), (s.d_conv, GN), jnp.float32) * 0.1).astype(dtype),
+                   "b": jnp.zeros((GN,), dtype)},
+        "A_log": jnp.zeros((H,), jnp.float32),
+        "D": jnp.ones((H,), jnp.float32),
+        "dt_bias": jnp.zeros((H,), jnp.float32),
+        "norm": {"scale": jnp.ones((di,), dtype)},
+    }
+    specs = {
+        "in_z": sz, "in_x": sx, "in_B": sB, "in_C": sC, "in_dt": sdt,
+        "out": so,
+        "conv_x": {"w": P(None, TP), "b": P(TP)},
+        "conv_B": {"w": P(None, None), "b": P(None)},
+        "conv_C": {"w": P(None, None), "b": P(None)},
+        "A_log": P(TP), "D": P(TP), "dt_bias": P(TP),
+        "norm": {"scale": P(TP)},
+    }
+    return params, specs
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array,
+                 state: Optional[jax.Array] = None):
+    """Depthwise causal conv along S.  x (B,S,C); w (K,C).  Returns (y, new
+    state (B,K-1,C)) when a state is provided (decode), else y only."""
+    K = w.shape[0]
+    if state is not None:
+        xin = jnp.concatenate([state, x], axis=1)  # (B, K-1+S, C)
+        new_state = xin[:, -(K - 1):, :]
+    else:
+        xin = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+        new_state = xin[:, -(K - 1):, :]
+    y = sum(xin[:, i : i + x.shape[1], :] * w[i][None, None, :] for i in range(K))
+    return jax.nn.silu(y + b), new_state
+
+
+def _ssd_chunked(xh, dt, A, Bm, Cm, chunk: int):
+    """Chunked SSD scan.
+
+    xh (B,S,H,P); dt (B,S,H) f32 post-softplus; A (H,) f32 negative;
+    Bm/Cm (B,S,G,N).  Heads map to groups h -> h % G... (G divides H; heads
+    share B/C within a group).  Returns y (B,S,H,P) and final state
+    (B,H,P,N) f32.
+    """
+    B_, S, H, Pd = xh.shape
+    G, N = Bm.shape[2], Bm.shape[3]
+    Q = min(chunk, S)
+    S_orig = S
+    if S % Q:
+        # pad with dt=0 entries: they contribute nothing to the state
+        # (x·dt = 0) and decay exp(0)=1, so the scan is exact.
+        pad = Q - S % Q
+        xh = jnp.pad(xh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        S = S + pad
+    nc = S // Q
+    rep = H // G
+    dtA = dt * A[None, None, :]  # (B,S,H) negative
+    xdt = (xh.astype(jnp.float32) * dt[..., None])
+
+    xc = xdt.reshape(B_, nc, Q, H, Pd)
+    dc = dtA.reshape(B_, nc, Q, H)
+    Bc = Bm.reshape(B_, nc, Q, G, N).astype(jnp.float32)
+    Cc = Cm.reshape(B_, nc, Q, G, N).astype(jnp.float32)
+    # broadcast groups to heads
+    Bh = jnp.repeat(Bc, rep, axis=3)  # (B,nc,Q,H,N)
+    Ch = jnp.repeat(Cc, rep, axis=3)
+
+    cs = jnp.cumsum(dc, axis=2)  # (B,nc,Q,H) cumulative log-decay
+    seg = cs[:, :, :, None, :] - cs[:, :, None, :, :]  # (B,nc,Qi,Qj,H)
+    iq = jnp.arange(Q)
+    causal = iq[:, None] >= iq[None, :]
+    L = jnp.where(causal[None, None, :, :, None], jnp.exp(seg), 0.0)
+    scores = jnp.einsum("bcihn,bcjhn->bcijh", Ch, Bh) * L
+    y_intra = jnp.einsum("bcijh,bcjhp->bcihp", scores, xc)
+
+    # chunk-final states: S_c = sum_j exp(cs_end - cs_j) B_j (x dt)_j
+    decay_to_end = jnp.exp(cs[:, :, -1:, :] - cs)  # (B,nc,Q,H)
+    S_c = jnp.einsum("bcjhn,bcjh,bcjhp->bchnp", Bh, decay_to_end, xc)
+    chunk_decay = jnp.exp(cs[:, :, -1, :])  # (B,nc,H)
+
+    def body(carry, t):
+        S_prev = carry  # (B,H,N,P)
+        S_new = S_prev * chunk_decay[:, t][:, :, None, None] + S_c[:, t]
+        return S_new, S_prev
+
+    S0 = jnp.zeros((B_, H, N, Pd), jnp.float32)
+    S_last, S_prevs = jax.lax.scan(body, S0, jnp.arange(nc))
+    S_prevs = jnp.moveaxis(S_prevs, 0, 1)  # (B,nc,H,N,P)
+    y_inter = jnp.einsum("bcihn,bcih,bchnp->bcihp", Ch, jnp.exp(cs), S_prevs)
+
+    y = (y_intra + y_inter).reshape(B_, S, H, Pd)[:, :S_orig]
+    return y, S_last
+
+
+def mamba2_apply(params, cfg, x, mode: str, cache: Optional[Dict] = None):
+    s = cfg.ssm
+    B, S, d = x.shape
+    di, H, Pd = cfg.d_inner, cfg.ssm_heads, s.head_dim
+    G, N = s.n_groups, s.d_state
+
+    z = jnp.einsum("bsd,df->bsf", x, params["in_z"]["w"])
+    xr = jnp.einsum("bsd,df->bsf", x, params["in_x"]["w"])
+    Braw = jnp.einsum("bsd,df->bsf", x, params["in_B"]["w"])
+    Craw = jnp.einsum("bsd,df->bsf", x, params["in_C"]["w"])
+    dt_raw = jnp.einsum("bsd,df->bsf", x, params["in_dt"]["w"])
+
+    conv_cache = cache.get("conv") if cache else None
+    if mode == "decode":
+        xr, cx = _causal_conv(xr, params["conv_x"]["w"], params["conv_x"]["b"], conv_cache["x"])
+        Braw, cB = _causal_conv(Braw, params["conv_B"]["w"], params["conv_B"]["b"], conv_cache["B"])
+        Craw, cC = _causal_conv(Craw, params["conv_C"]["w"], params["conv_C"]["b"], conv_cache["C"])
+    else:
+        xr, cx = _causal_conv(xr, params["conv_x"]["w"], params["conv_x"]["b"])
+        Braw, cB = _causal_conv(Braw, params["conv_B"]["w"], params["conv_B"]["b"])
+        Craw, cC = _causal_conv(Craw, params["conv_C"]["w"], params["conv_C"]["b"])
+
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + params["dt_bias"])
+    A = -jnp.exp(params["A_log"])
+    xh = xr.reshape(B, S, H, Pd)
+    Bm = Braw.reshape(B, S, G, N)
+    Cm = Craw.reshape(B, S, G, N)
+
+    if mode == "decode":
+        assert S == 1
+        state = cache["state"]  # (B,H,N,P) f32
+        dtA = jnp.exp(dt[:, 0] * A[None, :])  # (B,H)
+        Bh = jnp.repeat(Bm[:, 0].astype(jnp.float32), H // G, axis=1)  # (B,H,N)
+        Ch = jnp.repeat(Cm[:, 0].astype(jnp.float32), H // G, axis=1)
+        xdt = xh[:, 0].astype(jnp.float32) * dt[:, 0][..., None]  # (B,H,P)
+        state = state * dtA[:, :, None, None] + jnp.einsum("bhn,bhp->bhnp", Bh, xdt)
+        y = jnp.einsum("bhn,bhnp->bhp", Ch, state)[:, None]  # (B,1,H,P)
+        new_cache = {"state": state, "conv": {"x": cx, "B": cB, "C": cC}}
+    else:
+        y, S_last = _ssd_chunked(xh, dt, A, Bm, Cm, s.chunk)
+        new_cache = (
+            {"state": S_last, "conv": {"x": cx, "B": cB, "C": cC}}
+            if mode == "prefill"
+            else None
+        )
+
+    y = y + params["D"][None, None, :, None] * xh.astype(jnp.float32)
+    y = y.reshape(B, S, di).astype(x.dtype)
+    # gated RMSNorm (mamba2)
+    g = y * jax.nn.silu(z)
+    gf = g.astype(jnp.float32)
+    var = jnp.mean(gf * gf, axis=-1, keepdims=True)
+    g = (gf * jax.lax.rsqrt(var + cfg.norm_eps)).astype(x.dtype) * params["norm"]["scale"]
+    out = jnp.einsum("bsf,fd->bsd", g, params["out"]["w"])
+    return out, new_cache
+
+
+def mamba2_cache_spec(cfg, batch_sharded: bool):
+    bs = DP if batch_sharded else None
+    return {
+        "state": P(bs, TP, None, None),
+        "conv": {"x": P(bs, None, TP), "B": P(bs, None, None), "C": P(bs, None, None)},
+    }

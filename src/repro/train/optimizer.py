@@ -1,0 +1,150 @@
+"""Optimizers (no external deps): AdamW and Adafactor.
+
+State shards exactly like the parameters (the ZeRO property falls out of the
+param PartitionSpecs).  AdamW keeps f32 moments; Adafactor keeps factored
+row/col second moments (rank-1) for >=2-D params — grok-1-314B uses it so
+params + state fit 16 GiB/chip HBM (DESIGN.md §5).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["Optimizer", "adamw", "adafactor", "make_optimizer", "global_norm", "clip_by_global_norm"]
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable  # params -> state
+    update: Callable  # (grads, state, params, step) -> (new_params, new_state)
+    state_specs: Callable  # param_specs -> state_specs
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(sum(leaves))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype), grads), norm
+
+
+def _wd_mask(path_leaf) -> bool:
+    # no weight decay on norms/biases/scalars
+    return path_leaf.ndim >= 2
+
+
+def adamw(lr: float = 3e-4, b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+          weight_decay: float = 0.1, moment_dtype=jnp.float32) -> Optimizer:
+    def init(params):
+        return {
+            "m": jax.tree.map(lambda p: jnp.zeros(p.shape, moment_dtype), params),
+            "v": jax.tree.map(lambda p: jnp.zeros(p.shape, moment_dtype), params),
+        }
+
+    def update(grads, state, params, step):
+        t = (step + 1).astype(jnp.float32)
+        bc1 = 1.0 - b1 ** t
+        bc2 = 1.0 - b2 ** t
+
+        def upd(g, m, v, p):
+            g32 = g.astype(jnp.float32)
+            m2 = b1 * m.astype(jnp.float32) + (1 - b1) * g32
+            v2 = b2 * v.astype(jnp.float32) + (1 - b2) * g32 * g32
+            mhat = m2 / bc1
+            vhat = v2 / bc2
+            step_ = mhat / (jnp.sqrt(vhat) + eps)
+            if _wd_mask(p):
+                step_ = step_ + weight_decay * p.astype(jnp.float32)
+            return ((p.astype(jnp.float32) - lr * step_).astype(p.dtype),
+                    m2.astype(moment_dtype), v2.astype(moment_dtype))
+
+        out = jax.tree.map(upd, grads, state["m"], state["v"], params)
+        new_params = jax.tree.map(lambda o: o[0], out, is_leaf=lambda x: isinstance(x, tuple))
+        new_m = jax.tree.map(lambda o: o[1], out, is_leaf=lambda x: isinstance(x, tuple))
+        new_v = jax.tree.map(lambda o: o[2], out, is_leaf=lambda x: isinstance(x, tuple))
+        return new_params, {"m": new_m, "v": new_v}
+
+    def state_specs(param_specs):
+        return {"m": param_specs, "v": param_specs}
+
+    return Optimizer(init, update, state_specs)
+
+
+def adafactor(lr: float = 1e-3, decay: float = 0.8, eps: float = 1e-30,
+              clip_threshold: float = 1.0, weight_decay: float = 0.0) -> Optimizer:
+    """Factored second moments; no first moment (memory ~= params/r + params/c)."""
+
+    def _factored(p) -> bool:
+        return p.ndim >= 2
+
+    def init(params):
+        def one(p):
+            if _factored(p):
+                return {
+                    "r": jnp.zeros(p.shape[:-1], jnp.float32),
+                    "c": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32),
+                }
+            return {"v": jnp.zeros(p.shape, jnp.float32)}
+        return {"f": jax.tree.map(one, params)}
+
+    def update(grads, state, params, step):
+        t = (step + 1).astype(jnp.float32)
+        beta = 1.0 - t ** (-decay)
+
+        def upd(g, s, p):
+            g32 = g.astype(jnp.float32)
+            g2 = g32 * g32 + eps
+            if _factored(p):
+                r = beta * s["r"] + (1 - beta) * g2.mean(axis=-1)
+                c = beta * s["c"] + (1 - beta) * g2.mean(axis=-2)
+                rc = r.mean(axis=-1, keepdims=True)
+                vhat = (r / jnp.maximum(rc, eps))[..., None] * c[..., None, :]
+                ns = {"r": r, "c": c}
+            else:
+                vhat = beta * s["v"] + (1 - beta) * g2
+                ns = {"v": vhat}
+            u = g32 / jnp.sqrt(jnp.maximum(vhat, eps))
+            # update clipping (RMS)
+            rms = jnp.sqrt(jnp.mean(u * u))
+            u = u / jnp.maximum(1.0, rms / clip_threshold)
+            if weight_decay and _wd_mask(p):
+                u = u + weight_decay * p.astype(jnp.float32)
+            return ((p.astype(jnp.float32) - lr * u).astype(p.dtype), ns)
+
+        flat_p, tree = jax.tree.flatten(params)
+        flat_g = tree.flatten_up_to(grads)
+        flat_s = tree.flatten_up_to(state["f"])
+        outs = [upd(g, s, p) for g, s, p in zip(flat_g, flat_s, flat_p)]
+        new_params = tree.unflatten([o[0] for o in outs])
+        new_f = tree.unflatten([o[1] for o in outs])
+        return new_params, {"f": new_f}
+
+    def state_specs(param_specs):
+        from jax.sharding import PartitionSpec as P
+
+        def one(sp):
+            # r drops the last dim's axis, c drops the second-to-last
+            axes = tuple(sp)
+            if len(axes) >= 2:
+                return {"r": P(*axes[:-1]), "c": P(*(axes[:-2] + axes[-1:]))}
+            return {"v": P(*axes)}
+
+        return {"f": jax.tree.map(one, param_specs,
+                                  is_leaf=lambda s: isinstance(s, jax.sharding.PartitionSpec))}
+
+    return Optimizer(init, update, state_specs)
+
+
+def make_optimizer(name: str, **kw) -> Optimizer:
+    if name == "adamw":
+        return adamw(**kw)
+    if name == "adafactor":
+        return adafactor(**kw)
+    raise ValueError(name)

@@ -1,0 +1,55 @@
+"""train_step factory: value_and_grad + clip + optimizer, with optional
+microbatch gradient accumulation (scan) and donated state."""
+
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .optimizer import Optimizer, clip_by_global_norm
+
+__all__ = ["make_train_step"]
+
+
+def make_train_step(model, optimizer: Optimizer, *, grad_clip: float = 1.0,
+                    microbatches: int = 1):
+    """Returns train_step(params, opt_state, batch, step) ->
+    (params, opt_state, metrics).  ``batch`` leading dim must divide by
+    ``microbatches`` (gradient accumulation via scan keeps peak activation
+    memory ~1/microbatches)."""
+
+    def loss_fn(params, batch):
+        loss, metrics = model.loss_fn(params, batch)
+        return loss, metrics
+
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def train_step(params, opt_state, batch, step):
+        if microbatches == 1:
+            (loss, metrics), grads = grad_fn(params, batch)
+        else:
+            def mb(carry, mbatch):
+                acc = carry
+                (l, m), g = grad_fn(params, mbatch)
+                acc = jax.tree.map(jnp.add, acc, g)
+                return acc, (l, m)
+
+            split = jax.tree.map(
+                lambda x: x.reshape(microbatches, x.shape[0] // microbatches, *x.shape[1:]),
+                batch)
+            zero = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            grads, (losses, ms) = jax.lax.scan(mb, zero, split)
+            grads = jax.tree.map(lambda g: g / microbatches, grads)
+            loss = losses.mean()
+            metrics = jax.tree.map(lambda x: x.mean(), ms)
+
+        grads, gnorm = clip_by_global_norm(grads, grad_clip)
+        new_params, new_opt = optimizer.update(grads, opt_state, params, step)
+        metrics = dict(metrics)
+        metrics.update({"loss": loss, "grad_norm": gnorm})
+        return new_params, new_opt, metrics
+
+    return train_step

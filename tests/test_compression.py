@@ -1,0 +1,114 @@
+"""Codec roundtrips + the transparency property (a single value can be
+sliced out of a transparent stream — paper §2.2)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.compression import (
+    BYTES_CODECS,
+    FIXED_CODECS,
+    Encoded,
+    bitpack,
+    bitunpack,
+    get_bytes_codec,
+    get_fixed_codec,
+)
+
+rng = np.random.default_rng(0)
+
+
+@pytest.mark.parametrize("bits", [1, 2, 3, 7, 8, 13, 17, 32, 48, 63])
+def test_bitpack_roundtrip(bits):
+    v = rng.integers(0, 2 ** min(bits, 62), 777, dtype=np.uint64)
+    assert (bitunpack(bitpack(v, bits), len(v), bits) == v).all()
+
+
+FIXED_GEN = {
+    "plain": lambda n: rng.standard_normal(n).astype(np.float32),
+    "bitpack": lambda n: rng.integers(0, 5000, n).astype(np.uint32),
+    "bytepack": lambda n: rng.integers(-5000, 5000, n).astype(np.int64),
+    "delta_bitpack": lambda n: np.cumsum(rng.integers(0, 9, n)).astype(np.int64),
+    "rle": lambda n: np.repeat(rng.integers(0, 5, max(1, n // 7)),
+                               rng.integers(1, 15, max(1, n // 7)))[:n].astype(np.int32),
+    "dict": lambda n: rng.choice([3, 14, 15, 92, 65], n).astype(np.int64),
+}
+
+
+@pytest.mark.parametrize("name", list(FIXED_GEN))
+@pytest.mark.parametrize("n", [0, 1, 17, 1000])
+def test_fixed_codec_roundtrip(name, n):
+    c = get_fixed_codec(name)
+    v = FIXED_GEN[name](n)
+    if name == "rle" and n == 0:
+        v = v[:0]
+    enc = c.encode(v)
+    out = c.decode(enc, len(v))
+    assert (np.asarray(out) == v).all()
+
+
+def _values(n):
+    vals = []
+    for i in range(n):
+        k = int(rng.integers(0, 60))
+        vals.append(bytes(rng.integers(97, 110, k, dtype=np.uint8)) * int(rng.integers(1, 3)))
+    return vals
+
+
+@pytest.mark.parametrize("name", list(BYTES_CODECS))
+@pytest.mark.parametrize("n", [0, 1, 50])
+def test_bytes_codec_roundtrip(name, n):
+    c = get_bytes_codec(name)
+    vals = _values(n)
+    lengths = np.array([len(v) for v in vals], dtype=np.int64)
+    data = np.frombuffer(b"".join(vals), np.uint8) if vals else np.zeros(0, np.uint8)
+    enc = c.encode(lengths, data)
+    stored = enc.out_lengths if enc.out_lengths is not None else lengths
+    out_lens, out_data = c.decode(enc, stored)
+    assert (out_lens == lengths).all()
+    assert out_data.tobytes() == data.tobytes()
+
+
+@pytest.mark.parametrize("name", [n for n, c in BYTES_CODECS.items() if c.transparent])
+def test_transparency_single_value_slice(name):
+    """Transparent codecs must decode value i from its slice alone (this is
+    what full-zip relies on, paper 4.1.3)."""
+    c = get_bytes_codec(name)
+    vals = _values(40)
+    lengths = np.array([len(v) for v in vals], dtype=np.int64)
+    data = np.frombuffer(b"".join(vals), np.uint8) if vals else np.zeros(0, np.uint8)
+    enc = c.encode(lengths, data)
+    offs = np.zeros(len(vals) + 1, np.int64)
+    np.cumsum(enc.out_lengths, out=offs[1:])
+    for i in [0, 7, 39]:
+        piece = enc.data[offs[i]: offs[i + 1]]
+        _, od = c.decode(Encoded(piece, enc.meta), enc.out_lengths[i: i + 1])
+        assert od.tobytes() == vals[i]
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.lists(st.integers(0, 2**40), max_size=200))
+def test_bytepack_property(xs):
+    v = np.array(xs, dtype=np.int64)
+    c = get_fixed_codec("bytepack")
+    enc = c.encode(v)
+    assert (np.asarray(c.decode(enc, len(v))) == v).all()
+    # byte-aligned: encoded width is an integer number of bytes
+    if len(v):
+        assert enc.data.nbytes == c.encoded_width(enc) * len(v)
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.binary(max_size=400), st.integers(1, 7))
+def test_fsst_arbitrary_bytes(blob, nvals):
+    """FSST-lite must roundtrip arbitrary binary (escape path)."""
+    c = get_bytes_codec("fsst_lite")
+    cuts = sorted(rng.integers(0, len(blob) + 1, nvals - 1).tolist()) if nvals > 1 else []
+    bounds = [0] + cuts + [len(blob)]
+    vals = [blob[bounds[i]: bounds[i + 1]] for i in range(len(bounds) - 1)]
+    lengths = np.array([len(v) for v in vals], dtype=np.int64)
+    data = np.frombuffer(blob, np.uint8) if blob else np.zeros(0, np.uint8)
+    enc = c.encode(lengths, data)
+    out_lens, out_data = c.decode(enc, enc.out_lengths)
+    assert out_data.tobytes() == blob
+    assert (out_lens == lengths).all()

@@ -1,0 +1,103 @@
+"""Data pipeline (full-scan consumer) + serving (random-access consumer)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import reduced_config
+from repro.core import arrays as A
+from repro.core.file import FileReader, WriteOptions, write_table
+from repro.data import synth
+from repro.data.loader import TokenLoader, write_token_file
+from repro.models.registry import build_model
+from repro.serve.engine import BatchedEngine, Retriever
+from repro.serve.kv_cache import BLOCK, PagedKVCache
+
+
+def test_token_file_roundtrip():
+    fb = write_token_file(n_rows=64, seq_len=100, vocab=1000, seed=0)
+    fr = FileReader(fb)
+    arr = fr.scan("tokens")
+    assert isinstance(arr, A.ListArray)
+    assert (arr.child.values < 1000).all()
+    # miniblock chosen for int32 tokens (4 B/value << 128)
+    assert fr.columns["tokens"]["leaves"][0]["meta"]["encoding"] == "miniblock"
+
+
+def test_loader_deterministic_cursor():
+    fb = write_token_file(n_rows=64, seq_len=100, vocab=1000, seed=0)
+    l1 = TokenLoader(fb, batch=4, seq_len=32, seed=5)
+    l2 = TokenLoader(fb, batch=4, seq_len=32, seed=5)
+    try:
+        for s in [0, 3, 17]:
+            np.testing.assert_array_equal(
+                l1.batch_for_step(s)["tokens"], l2.batch_for_step(s)["tokens"])
+        a = next(iter(l1))
+        assert a["tokens"].shape == (4, 33)
+    finally:
+        l1.close()
+        l2.close()
+
+
+def test_paged_kv_cache():
+    rng = np.random.default_rng(0)
+    kv = PagedKVCache(n_blocks=32, kv_features=16)
+    kv.add_request(0)
+    kv.add_request(1)
+    a = rng.standard_normal((200, 16)).astype(np.float32)
+    b = rng.standard_normal((40, 16)).astype(np.float32)
+    kv.append(0, a)
+    kv.append(1, b)
+    got_a = np.asarray(kv.gather(0), np.float32)
+    got_b = np.asarray(kv.gather(1), np.float32)
+    np.testing.assert_allclose(got_a, a, rtol=1e-2)
+    np.testing.assert_allclose(got_b, b, rtol=1e-2)
+    assert kv.utilization > 0
+    kv.release(0)
+    kv.add_request(2)
+    kv.append(2, b)
+    np.testing.assert_allclose(np.asarray(kv.gather(2), np.float32), b, rtol=1e-2)
+
+
+def test_engine_generates():
+    cfg = reduced_config("smollm-360m")
+    model = build_model(cfg)
+    params, _ = model.init(jax.random.PRNGKey(0))
+    eng = BatchedEngine(model, params)
+    prompts = jnp.asarray(np.random.default_rng(0).integers(1, cfg.vocab, (2, 16)),
+                          jnp.int32)
+    out = eng.generate({"tokens": prompts}, n_new=8)
+    assert out.tokens.shape == (2, 8)
+    assert (out.tokens >= 0).all() and (out.tokens < cfg.vocab).all()
+
+
+def test_engine_matches_autoregressive_forward():
+    """Generated greedy tokens equal repeated full-forward argmax."""
+    cfg = reduced_config("mamba2-780m")
+    model = build_model(cfg)
+    params, _ = model.init(jax.random.PRNGKey(0))
+    eng = BatchedEngine(model, params)
+    rng = np.random.default_rng(1)
+    prompts = jnp.asarray(rng.integers(1, cfg.vocab, (1, 16)), jnp.int32)
+    out = eng.generate({"tokens": prompts}, n_new=4)
+    # reference: grow the sequence with full prefills
+    seq = prompts
+    ref = []
+    for _ in range(4):
+        logits, _, _ = model._full_forward(params, {"tokens": seq}, "prefill")
+        nxt = jnp.argmax(logits[:, -1], -1)[:, None].astype(jnp.int32)
+        ref.append(int(nxt[0, 0]))
+        seq = jnp.concatenate([seq, nxt], axis=1)
+    assert out.tokens[0].tolist() == ref
+
+
+def test_retriever_iops():
+    emb = synth.scenario("embeddings", 2000)
+    fb = write_table({"embedding": emb}, WriteOptions("lance"))
+    r = Retriever(fb, "embedding")
+    ids = np.array([3, 999, 1500])
+    out, stats = r.fetch(ids)
+    assert stats.n_iops == len(ids)  # fixed-width full-zip: 1 IOP/row
+    got = np.asarray(out.values)
+    np.testing.assert_allclose(got, emb.values[ids], rtol=1e-6)

@@ -1,0 +1,69 @@
+"""Device-model behaviour + the paper's S3-vs-NVMe observations."""
+
+import numpy as np
+
+from repro.core import arrays as A, types as T
+from repro.core.file import FileReader, WriteOptions, write_table
+from repro.core.io_sim import HBM, NVME, S3, IOStats, model_time
+
+
+def test_device_model_shapes():
+    """Fig 1 qualitative shape: NVMe wins small random reads; S3 needs
+    ~100 KiB reads to amortize; both converge at large sequential."""
+    small = IOStats(n_iops=1000, bytes_read=1000 * 4096,
+                    useful_bytes=1000 * 4096, max_phase=1)
+    big = IOStats(n_iops=1000, bytes_read=1000 * (1 << 20),
+                  useful_bytes=1000 * (1 << 20), max_phase=1)
+    assert model_time(small, NVME) < model_time(small, S3) / 50
+    # at 1 MiB reads both are bandwidth-bound and much closer
+    ratio = model_time(big, S3) / model_time(big, NVME)
+    assert ratio < 5
+
+
+def test_phases_hurt_more_on_s3():
+    """Paper §6.1.2: the dependent-phase effect 'is more significant in S3,
+    where IOPS are far more expensive'.  Arrow's 3-phase List<String> take
+    vs Lance full-zip's 2-phase take: the gap widens on S3."""
+    vals = [["ab", None, "cd"], None, ["xyz"], []] * 100
+    arr = A.from_pylist(vals, T.List(T.utf8()))
+    rows = np.arange(0, 400, 13)
+
+    def stats_for(opts):
+        fr = FileReader(write_table({"c": arr}, opts))
+        fr.reset_io()
+        fr.take("c", rows)
+        return fr.io_stats()
+
+    st_arrow = stats_for(WriteOptions("arrow"))
+    st_lance = stats_for(WriteOptions("lance-fullzip"))
+    assert st_arrow.max_phase > st_lance.max_phase
+    # the absolute penalty of the extra dependent phase is ~1000x larger on
+    # S3 (30 ms round trips) than on NVMe (90 us)
+    nvme_extra = model_time(st_arrow, NVME) - model_time(st_lance, NVME)
+    s3_extra = model_time(st_arrow, S3) - model_time(st_lance, S3)
+    assert s3_extra > 100 * max(nvme_extra, 1e-9)
+    assert s3_extra > 0
+
+
+def test_hbm_model_is_dma_shaped():
+    """DESIGN.md §2.1: the TPU translation treats an IOP as a DMA; tiny
+    reads cost a full min-granule."""
+    tiny = IOStats(n_iops=10_000, bytes_read=10_000 * 8,
+                   useful_bytes=10_000 * 8, max_phase=1)
+    padded = IOStats(n_iops=10_000, bytes_read=10_000 * 512,
+                     useful_bytes=10_000 * 512, max_phase=1)
+    assert abs(model_time(tiny, HBM) - model_time(padded, HBM)) / \
+        model_time(padded, HBM) < 0.01
+
+
+def test_coalescing_counter():
+    from repro.core.io_sim import Disk, IOTracker
+
+    disk = Disk(np.zeros(10_000, np.uint8))
+    tr = IOTracker(disk)
+    tr.read(0, 100)
+    tr.read(50, 100)   # overlaps -> coalesces
+    tr.read(500, 100)  # far -> separate
+    st = tr.stats()
+    assert st.n_iops == 3
+    assert st.n_coalesced == 2

@@ -1,0 +1,187 @@
+"""End-to-end behaviour of the paper's system: every structural encoding
+roundtrips every data type, and the IOPS / read-amplification / search-cache
+claims from the paper hold exactly."""
+
+import numpy as np
+import pytest
+
+from repro.core import arrays as A, types as T
+from repro.core.adaptive import FULLZIP_THRESHOLD_BYTES, choose_encoding
+from repro.core.file import FileReader, WriteOptions, write_table
+from repro.core.shred import shred
+from repro.data import synth
+
+rng = np.random.default_rng(42)
+N = 600
+TAKE = rng.choice(N, 31, replace=False)
+
+ENCODINGS = [
+    ("lance", WriteOptions("lance")),
+    ("lance-miniblock", WriteOptions("lance-miniblock")),
+    ("lance-fullzip", WriteOptions("lance-fullzip")),
+    ("lance-fullzip-fsst", WriteOptions("lance-fullzip", bytes_codec="fsst_lite")),
+    ("parquet", WriteOptions("parquet")),
+    ("parquet-dict", WriteOptions("parquet", dict_encode=True)),
+    ("arrow", WriteOptions("arrow")),
+    ("arrow-zstd", WriteOptions("arrow", arrow_compress=True)),
+]
+
+TYPES = ["scalar", "string", "scalar-list", "string-list", "vector"]
+
+
+@pytest.fixture(scope="module")
+def datasets():
+    return {t: synth.paper_type(t, N, seed=7) for t in TYPES}
+
+
+@pytest.mark.parametrize("encname,opts", ENCODINGS, ids=[e[0] for e in ENCODINGS])
+@pytest.mark.parametrize("tname", TYPES)
+def test_roundtrip(encname, opts, tname, datasets):
+    arr = datasets[tname]
+    fr = FileReader(write_table({"c": arr}, opts))
+    want = A.to_pylist(arr)
+    assert A.to_pylist(fr.scan("c")) == want
+    got = A.to_pylist(fr.take("c", TAKE))
+    assert got == [want[i] for i in TAKE]
+
+
+# ---------------------------------------------------------------------------
+# the paper's quantitative claims
+# ---------------------------------------------------------------------------
+
+
+def _take_stats(arr, opts, rows=TAKE):
+    fr = FileReader(write_table({"c": arr}, opts))
+    fr.reset_io()
+    fr.take("c", rows)
+    return fr, fr.io_stats()
+
+
+def test_fullzip_fixed_width_is_1_iop(datasets):
+    """'At most 1 IOP for random access to a fixed-width column' (§4)."""
+    for t in ["scalar", "vector"]:
+        fr, st = _take_stats(datasets[t], WriteOptions("lance-fullzip"))
+        assert st.n_iops == len(TAKE)
+        assert st.max_phase == 1
+        assert fr.search_cache_bytes() == 0  # §4.2.4: no search cache
+
+
+def test_fullzip_variable_width_is_2_iops(datasets):
+    """'At most 2 IOPS for random access to a variable-width column' —
+    regardless of nesting (§4)."""
+    for t in ["string", "scalar-list", "string-list"]:
+        fr, st = _take_stats(datasets[t], WriteOptions("lance-fullzip"))
+        assert st.n_iops == 2 * len(TAKE), t
+        assert st.max_phase == 2
+        assert fr.search_cache_bytes() == 0
+
+
+def test_fullzip_nesting_invariance():
+    """Performance is 'consistent regardless of how many levels of nesting'."""
+    vals = [[{"s": ["ab", "cd"]}], None, [{"s": []}]] * 50
+    typ = T.List(T.Struct((("s", T.List(T.utf8())),)))
+    arr = A.from_pylist(vals, typ)
+    rows = np.arange(0, 150, 7)
+    fr, st = _take_stats(arr, WriteOptions("lance-fullzip"), rows=rows)
+    assert st.n_iops == 2 * len(rows)
+    assert st.max_phase == 2
+
+
+def test_arrow_list_string_is_5_iops_3_phases():
+    """Fig 4: a List<String> 'which contains nulls in each layer' needs 5
+    IOPS issued in 3 dependent phases."""
+    vals = [["ab", None, "cd"], None, ["xyz"], []] * 50
+    arr = A.from_pylist(vals, T.List(T.utf8()))
+    fr, st = _take_stats(arr, WriteOptions("arrow"), rows=np.array([5]))
+    assert st.n_iops == 5  # list validity, list offsets, str validity,
+    #                        str offsets, str data
+    assert st.max_phase == 3
+    # the same nulls-in-each-layer column in Lance full-zip: 2 IOPS, 2 phases
+    fr2, st2 = _take_stats(arr, WriteOptions("lance-fullzip"), rows=np.array([5]))
+    assert st2.n_iops == 2 and st2.max_phase == 2
+
+
+def test_parquet_one_page_per_row():
+    """§3.1: page index maps a row to exactly one page -> 1 IOP per row (for
+    rows in distinct pages)."""
+    arr = synth.paper_type("vector", N, seed=9)  # 3 KiB values: 1-2 rows/page
+    fr, st = _take_stats(arr, WriteOptions("parquet", page_bytes=8192),
+                         rows=np.array([1, 100, 200, 300, 400]))
+    assert st.n_iops == 5
+    assert st.max_phase == 1
+
+
+def test_parquet_dict_needs_extra_fetch(datasets):
+    """§6.1.1: cold dictionary page must be fetched per take."""
+    arr = datasets["string"]
+    fr, st = _take_stats(arr, WriteOptions("parquet", dict_encode=True),
+                         rows=np.array([3]))
+    assert st.n_iops == 2  # dict page + data page
+    fr2 = FileReader(write_table({"c": arr}, WriteOptions("parquet", dict_encode=True)),
+                     dict_cached=True)
+    fr2.take("c", np.array([3]))  # warm the cache
+    fr2.reset_io()
+    fr2.take("c", np.array([4]))
+    assert fr2.io_stats().n_iops == 1  # Lance-style: dict in search cache
+
+
+def test_adaptive_threshold(datasets):
+    """§4: >=128 B/value -> full-zip, below -> mini-block."""
+    small = shred(datasets["scalar"])[0]
+    big = shred(datasets["vector"])[0]
+    assert choose_encoding(small) == "miniblock"
+    assert choose_encoding(big) == "fullzip"
+    # the file writer applies it
+    fr = FileReader(write_table({"c": datasets["vector"]}, WriteOptions("lance")))
+    assert fr.columns["c"]["leaves"][0]["meta"]["encoding"] == "fullzip"
+    fr = FileReader(write_table({"c": datasets["scalar"]}, WriteOptions("lance")))
+    assert fr.columns["c"]["leaves"][0]["meta"]["encoding"] == "miniblock"
+
+
+def test_search_cache_budget():
+    """§2.3: search cache stays well under 1% of data for scalar mini-blocks."""
+    arr = synth.paper_type("scalar", 50_000, seed=11)
+    fr = FileReader(write_table({"c": arr}, WriteOptions("lance")))
+    assert fr.search_cache_bytes() / fr.data_bytes() < 0.01
+
+
+def test_miniblock_chunks_within_limits():
+    """§4.2.1: chunks are <=4096 values, 8-byte aligned words, <=32 KiB."""
+    arr = synth.paper_type("string", 20_000, seed=13)
+    fr = FileReader(write_table({"c": arr}, WriteOptions("lance-miniblock")))
+    meta = fr.columns["c"]["leaves"][0]["meta"]
+    for cm in meta["chunks"]:
+        assert cm["n_entries"] <= 4096
+        assert cm["words"] * 8 <= 32 * 1024
+
+
+def test_struct_packing_tradeoff():
+    """§4.3/Fig 18: packed struct fetches all fields in 1 IOP; single-field
+    scan reads the whole stride."""
+    n = 400
+    children = [(f"f{i}", A.PrimitiveArray.build(
+        rng.integers(0, 1 << 30, n).astype(np.int64), nullable=False))
+        for i in range(4)]
+    arr = A.StructArray.build(children, nullable=False)
+    fb = write_table({"s": arr}, WriteOptions("lance", packed_columns=("s",)))
+    fr = FileReader(fb)
+    fr.reset_io()
+    rows = np.arange(0, n, 37)
+    got = fr.take("s", rows)
+    st = fr.io_stats()
+    assert st.n_iops == len(rows)  # 1 IOP for ALL fields
+    assert A.to_pylist(got) == [A.to_pylist(arr)[i] for i in rows]
+    fr.reset_io()
+    fr.scan_packed_field("s", ["f0"])
+    assert fr.io_stats().bytes_read == fr.data_bytes()  # reads everything
+
+
+def test_multi_column_table():
+    table = {
+        "id": synth.paper_type("scalar", N, seed=1),
+        "text": synth.paper_type("string", N, seed=2),
+        "emb": synth.paper_type("vector", N, seed=3),
+    }
+    fr = FileReader(write_table(table, WriteOptions("lance")))
+    for name, arr in table.items():
+        assert A.to_pylist(fr.take(name, TAKE)) == [A.to_pylist(arr)[i] for i in TAKE]
