@@ -8,6 +8,18 @@ scale; rates are per-row so the comparisons carry.
 
   PYTHONPATH=src python -m benchmarks.run            # all
   PYTHONPATH=src python -m benchmarks.run fig10 fig13
+  PYTHONPATH=src python -m benchmarks.run --store tiered fig11
+
+``--store {flat,tiered,flat-s3,hot}`` picks the storage stack every
+benchmark reader is built on: ``flat`` is the seed behaviour (every read
+priced on NVMe), ``tiered`` routes reads through the NVMe block cache over
+S3 from ``repro.store``, ``flat-s3`` is the cold object store, ``hot`` adds
+a RAM tier.  Under a non-flat stack the modelled column is priced with the
+store's per-tier accounting (``FileReader.modelled_time``); counted IOPS
+stay store-independent, and the measured (CPU) column includes the
+simulator's block-classification overhead.  The ``store`` benchmark
+reproduces the headline cold-S3 / NVMe-warm / flat-NVMe comparison
+regardless of the flag.
 """
 
 from __future__ import annotations
@@ -29,13 +41,19 @@ ROWS = {"scalar": 200_000, "string": 100_000, "scalar-list": 50_000,
         "image": 800, "image-list": 300}
 TAKE_N = 256  # one paper 'take' op
 
+STORE_SPEC = "flat"  # set by --store; every benchmark reader is built on it
+
+
+def _reader(file_bytes, **kw) -> FileReader:
+    return FileReader(file_bytes, store=STORE_SPEC, **kw)
+
 
 def _emit(name: str, us: float, derived: str = ""):
     print(f"{name},{us:.2f},{derived}")
 
 
 def _take_bench(arr, opts, n_rows, repeats=3):
-    fr = FileReader(write_table({"c": arr}, opts))
+    fr = _reader(write_table({"c": arr}, opts))
     rng = np.random.default_rng(0)
     rows = rng.choice(n_rows, min(TAKE_N, n_rows), replace=False)
     fr.take("c", rows[:4])  # warm code paths
@@ -48,13 +66,17 @@ def _take_bench(arr, opts, n_rows, repeats=3):
     st.n_iops //= repeats
     st.bytes_read //= repeats
     st.useful_bytes //= repeats
-    t_nvme = model_time(st, NVME)
-    rows_s = len(rows) / max(t_nvme, dt)  # disk- or cpu-bound, whichever binds
-    return dt, st, t_nvme, rows_s, fr
+    if STORE_SPEC == "flat":
+        t_model = model_time(st, NVME)
+    else:
+        # price the counted trace on the configured tier stack instead
+        t_model = fr.modelled_time() / repeats
+    rows_s = len(rows) / max(t_model, dt)  # disk- or cpu-bound, whichever binds
+    return dt, st, t_model, rows_s, fr
 
 
 def _scan_bench(arr, opts, repeats=3):
-    fr = FileReader(write_table({"c": arr}, opts))
+    fr = _reader(write_table({"c": arr}, opts))
     fr.scan("c")
     fr.reset_io()
     t0 = time.perf_counter()
@@ -140,7 +162,7 @@ def fig11_encodings_random_access():
         arr = A.from_pylist(py, typ)
         for enc, opts in [("arrow", WriteOptions("arrow")),
                           ("lance-fullzip", WriteOptions("lance-fullzip"))]:
-            fr = FileReader(write_table({"c": arr}, opts))
+            fr = _reader(write_table({"c": arr}, opts))
             fr.reset_io()
             fr.take("c", take_rows)
             st = fr.io_stats()
@@ -194,7 +216,7 @@ def fig13_compression():
             ("lance", WriteOptions("lance", bytes_codec="zstd_chunk")),
             ("lance-fsst", WriteOptions("lance", bytes_codec="fsst_lite")),
         ]:
-            fr = FileReader(write_table({"c": arr}, opts))
+            fr = _reader(write_table({"c": arr}, opts))
             ratio = raw / fr.data_bytes()
             _emit(f"fig13/{enc}/{sc}", 0.0,
                   f"ratio={ratio:.2f};disk_bytes={fr.data_bytes()}")
@@ -246,8 +268,8 @@ def fig18_struct_packing():
             for i in range(k)]
         arr = A.StructArray.build(children, nullable=False)
         rows = rng.choice(n, TAKE_N, replace=False)
-        fr = FileReader(write_table({"s": arr},
-                                    WriteOptions("lance", packed_columns=("s",))))
+        fr = _reader(write_table({"s": arr},
+                                  WriteOptions("lance", packed_columns=("s",))))
         fr.reset_io()
         t0 = time.perf_counter()
         fr.take("s", rows)
@@ -258,7 +280,7 @@ def fig18_struct_packing():
         t0 = time.perf_counter()
         fr.scan_packed_field("s", ["f0"])
         dt_scan_p = time.perf_counter() - t0
-        fr2 = FileReader(write_table({"s": arr}, WriteOptions("lance")))
+        fr2 = _reader(write_table({"s": arr}, WriteOptions("lance")))
         fr2.reset_io()
         t0 = time.perf_counter()
         fr2.take("s", rows)
@@ -270,6 +292,59 @@ def fig18_struct_packing():
               f"take_rows_s_shredded={TAKE_N/t_take_shred:.0f};"
               f"iops_packed={st.n_iops};iops_shredded={st2.n_iops};"
               f"scan1field_us={dt_scan_p*1e6:.0f}")
+
+
+def store_tiering():
+    """The tiered-store headline: a take-heavy random-access workload priced
+    cold from S3, through an NVMe block cache (cold fill then warm hits),
+    and on bare NVMe.  The modelled NVMe-warm time must beat cold S3."""
+    from repro.store import TieredStore
+
+    n = ROWS["vector"]
+    arr = synth.paper_type("vector", n, seed=1)
+    fb = write_table({"c": arr}, WriteOptions("lance"))
+    rng = np.random.default_rng(0)
+    rows = rng.choice(n, TAKE_N, replace=False)
+
+    fr_s3 = FileReader(fb, store="flat-s3")
+    fr_s3.take("c", rows)
+    t_cold_s3 = fr_s3.modelled_time()
+    _emit("store/cold_s3", t_cold_s3 * 1e6,
+          f"rows_per_s={TAKE_N/t_cold_s3:.0f}")
+
+    fr = FileReader(fb, store="tiered")
+    fr.take("c", rows)
+    t_fill = fr.modelled_time()
+    miss_stats = {s.name: s for s in fr.tier_stats()}
+    _emit("store/tiered_fill", t_fill * 1e6,
+          f"rows_per_s={TAKE_N/t_fill:.0f};"
+          f"s3_iops={miss_stats['s3'].n_iops}")
+    fr.reset_io()
+    fr.take("c", rows)
+    t_warm = fr.modelled_time()
+    warm = {s.name: s for s in fr.tier_stats()}
+    nv = warm["nvme_970evo"]
+    _emit("store/tiered_warm", t_warm * 1e6,
+          f"rows_per_s={TAKE_N/t_warm:.0f};hit_rate={nv.hit_rate:.2f};"
+          f"s3_iops={warm['s3'].n_iops}")
+
+    fr_nvme = FileReader(fb)  # flat NVMe
+    fr_nvme.take("c", rows)
+    t_nvme = fr_nvme.modelled_time()
+    _emit("store/flat_nvme", t_nvme * 1e6, f"rows_per_s={TAKE_N/t_nvme:.0f}")
+
+    assert t_warm < t_cold_s3, "NVMe-warm tiered take must beat cold S3"
+    _emit("store/warm_over_cold", 0.0,
+          f"speedup={t_cold_s3/t_warm:.0f}x;warm_lt_cold={t_warm < t_cold_s3}")
+
+    # capacity-pressured cache: working set larger than the cache forces
+    # evictions; hit rate and speedup degrade gracefully
+    fr_small = FileReader(fb, store=lambda d: TieredStore.cached(d, cache_bytes=1 << 20))
+    for _ in range(2):
+        fr_small.take("c", rows)
+    ev = {s.name: s for s in fr_small.tier_stats()}["nvme_970evo"]
+    _emit("store/tiered_1MiB_cache", fr_small.modelled_time() * 1e6,
+          f"hit_rate={ev.hit_rate:.2f};evictions={ev.evictions}")
 
 
 def kernel_bench():
@@ -331,11 +406,31 @@ def loader_bench():
 ALL = [fig1_device_model, fig10_parquet_random_access,
        fig11_encodings_random_access, fig12_fullzip_vs_miniblock,
        fig13_compression, fig14_16_full_scan, fig17_scan_decode_cost,
-       fig18_struct_packing, kernel_bench, loader_bench]
+       fig18_struct_packing, store_tiering, kernel_bench, loader_bench]
+
+
+def _parse_args(argv):
+    global STORE_SPEC
+    want = set()
+    it = iter(argv)
+    for a in it:
+        if a == "--store":
+            STORE_SPEC = next(it, None)
+            if STORE_SPEC is None:
+                raise SystemExit("--store requires a value (flat|tiered|flat-s3|hot)")
+        elif a.startswith("--store="):
+            STORE_SPEC = a.split("=", 1)[1]
+        elif a.startswith("-"):
+            raise SystemExit(f"unknown option {a}")
+        else:
+            want.add(a)
+    if STORE_SPEC not in ("flat", "tiered", "flat-s3", "hot"):
+        raise SystemExit(f"--store must be flat|tiered|flat-s3|hot, got {STORE_SPEC}")
+    return want
 
 
 def main() -> None:
-    want = set(sys.argv[1:])
+    want = _parse_args(sys.argv[1:])
     print("name,us_per_call,derived")
     for fn in ALL:
         tag = fn.__name__.split("_")[0]

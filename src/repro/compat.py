@@ -1,0 +1,47 @@
+"""jax API compatibility: the repo targets the jax>=0.6 surface
+(``jax.shard_map``, ``jax.set_mesh``, ``check_vma``); older 0.4.x releases
+spell these ``jax.experimental.shard_map.shard_map`` / ``check_rep`` and
+have no ambient-mesh setter.  Import from here instead of feature-testing
+at every call site."""
+
+from __future__ import annotations
+
+import contextlib
+
+import jax
+
+__all__ = ["shard_map", "set_mesh", "axis_size"]
+
+
+if hasattr(jax.lax, "axis_size"):
+    def axis_size(name) -> int:
+        return jax.lax.axis_size(name)
+else:
+    def axis_size(name) -> int:
+        # on 0.4.x, psum of a python scalar constant-folds to a static int
+        # inside shard_map, so it is usable in shape computations
+        return jax.lax.psum(1, name)
+
+
+if hasattr(jax, "shard_map"):
+    def shard_map(f, mesh, in_specs, out_specs, check: bool = False):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=check)
+else:
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    def shard_map(f, mesh, in_specs, out_specs, check: bool = False):
+        return _shard_map(f, mesh=mesh, in_specs=in_specs,
+                          out_specs=out_specs, check_rep=check)
+
+
+if hasattr(jax, "set_mesh"):
+    set_mesh = jax.set_mesh
+elif hasattr(jax.sharding, "use_mesh"):
+    set_mesh = jax.sharding.use_mesh
+else:
+    @contextlib.contextmanager
+    def set_mesh(mesh):
+        # pre-ambient-mesh jax: shard_map / jit carry the mesh explicitly,
+        # so there is nothing to install
+        yield

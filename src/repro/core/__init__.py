@@ -17,5 +17,5 @@ from .arrays import (  # noqa: F401
     to_pylist,
 )
 from .file import FileReader, WriteOptions, write_table  # noqa: F401
-from .io_sim import HBM, NVME, S3, Disk, IOTracker, model_time  # noqa: F401
+from .io_sim import DRAM, HBM, NVME, S3, Disk, IOTracker, model_time  # noqa: F401
 from .shred import ShreddedLeaf, shred, unshred  # noqa: F401

@@ -22,15 +22,10 @@ import numpy as np
 from . import arrays as A
 from . import types as T
 from .encodings_base import EncodedColumn, pad_to
-from .io_sim import IOTracker
 
-try:
-    import zstandard as _zstd
-
-    _C = _zstd.ZstdCompressor(level=1)
-    _D = _zstd.ZstdDecompressor()
-except Exception:  # pragma: no cover
-    _zstd = None
+# one codec-selection point for the whole repo: compression.py already
+# resolves zstandard-or-zlib, so Arrow buffers use the exact same pair
+from .compression import _ZSTD_C as _C, _ZSTD_D as _D
 
 __all__ = ["encode_arrow", "ArrowReader"]
 
@@ -91,10 +86,9 @@ class ArrowReader:
     """Reads the Arrow layout.  Returns nested ``Array`` values directly
     (this encoding has no rep/def streams)."""
 
-    def __init__(self, meta: Dict, base: int, tracker: IOTracker, typ: T.DataType):
+    def __init__(self, meta: Dict, base: int, typ: T.DataType):
         self.meta = meta
         self.base = base
-        self.tracker = tracker
         self.type = typ
         self.bufs: Dict[Tuple[str, str], _Buf] = {
             (b["name"], b["role"]): _Buf(b["offset"], b["size"], b["len"])
@@ -103,130 +97,130 @@ class ArrowReader:
         self._full_cache: Dict[Tuple[str, str], np.ndarray] = {}
 
     # -- raw access helpers ----------------------------------------------
-    def _read_full(self, key, phase=0) -> np.ndarray:
+    def _read_full(self, io, key, phase=0) -> np.ndarray:
         if key in self._full_cache:
             return self._full_cache[key]
         b = self.bufs[key]
-        raw = self.tracker.read(self.base + b.offset, b.size, phase=phase)
+        raw = io.read(self.base + b.offset, b.size, phase=phase)
         if self.meta["compressed"]:
             raw = np.frombuffer(_D.decompress(raw.tobytes()), np.uint8)
         self._full_cache[key] = raw
         return raw
 
-    def _read_slice(self, key, byte_lo: int, byte_hi: int, phase: int) -> np.ndarray:
+    def _read_slice(self, io, key, byte_lo: int, byte_hi: int, phase: int) -> np.ndarray:
         if self.meta["compressed"]:
             # opaque: the entire buffer must be fetched + decompressed
-            return self._read_full(key, phase)[byte_lo:byte_hi]
+            return self._read_full(io, key, phase)[byte_lo:byte_hi]
         b = self.bufs[key]
-        return self.tracker.read(self.base + b.offset + byte_lo, byte_hi - byte_lo, phase=phase)
+        return io.read(self.base + b.offset + byte_lo, byte_hi - byte_lo, phase=phase)
 
-    def _validity_bit(self, key, i: int, phase: int) -> bool:
-        raw = self._read_slice(key, i // 8, i // 8 + 1, phase)
+    def _validity_bit(self, io, key, i: int, phase: int) -> bool:
+        raw = self._read_slice(io, key, i // 8, i // 8 + 1, phase)
         return bool((int(raw[0]) >> (i % 8)) & 1)
 
-    def _offsets_pair(self, key, i: int, phase: int) -> Tuple[int, int]:
-        raw = self._read_slice(key, i * 8, (i + 2) * 8, phase)
+    def _offsets_pair(self, io, key, i: int, phase: int) -> Tuple[int, int]:
+        raw = self._read_slice(io, key, i * 8, (i + 2) * 8, phase)
         v = np.frombuffer(raw.tobytes(), np.int64, count=2)
         return int(v[0]), int(v[1])
 
     # -- take --------------------------------------------------------------
-    def take(self, rows: np.ndarray) -> A.Array:
+    def take(self, rows: np.ndarray, io) -> A.Array:
         # cold random access: opaque (compressed) buffers must be re-fetched
         # per operation -- this is why compressed Arrow cannot random access
         # (paper sec 6.2)
         self._full_cache = {}
-        parts = [self._take_node(self.type, "c", int(r), int(r) + 1, 0) for r in rows]
+        parts = [self._take_node(io, self.type, "c", int(r), int(r) + 1, 0) for r in rows]
         out = A.concat(parts) if parts else A.from_pylist([], self.type)
-        self.tracker.note_useful(_array_nbytes(out))
+        io.note_useful(_array_nbytes(out))
         return out
 
-    def _take_node(self, typ: T.DataType, path: str, lo: int, hi: int, phase: int) -> A.Array:
+    def _take_node(self, io, typ: T.DataType, path: str, lo: int, hi: int, phase: int) -> A.Array:
         """Fetch rows [lo, hi) of the node at ``path``; ``phase`` counts the
         dependent round trips needed to learn [lo, hi)."""
         n = hi - lo
         if typ.nullable:
-            raw = self._read_slice((path, "validity"), lo // 8, (hi - 1) // 8 + 1, phase)
+            raw = self._read_slice(io, (path, "validity"), lo // 8, (hi - 1) // 8 + 1, phase)
             bits = np.unpackbits(raw, bitorder="little")
             validity = bits[lo - (lo // 8) * 8 : lo - (lo // 8) * 8 + n].astype(bool)
         else:
             validity = np.ones(n, bool)
         if isinstance(typ, T.Primitive):
             w = np.dtype(typ.dtype).itemsize
-            raw = self._read_slice((path, "values"), lo * w, hi * w, phase)
+            raw = self._read_slice(io, (path, "values"), lo * w, hi * w, phase)
             vals = np.frombuffer(raw.tobytes(), np.dtype(typ.dtype), count=n)
             return A.PrimitiveArray(typ, validity, vals)
         if isinstance(typ, T.FixedSizeList):
             w = np.dtype(typ.child.dtype).itemsize * typ.size
-            raw = self._read_slice((path, "values"), lo * w, hi * w, phase)
+            raw = self._read_slice(io, (path, "values"), lo * w, hi * w, phase)
             vals = np.frombuffer(raw.tobytes(), np.dtype(typ.child.dtype)).reshape(n, typ.size)
             return A.FixedSizeListArray(typ, validity, vals)
         if isinstance(typ, (T.Utf8, T.Binary)):
-            offs = self._offsets_vector(path, lo, hi, phase)
-            data = self._read_slice((path, "data"), int(offs[0]), int(offs[-1]), phase + 1)
+            offs = self._offsets_vector(io, path, lo, hi, phase)
+            data = self._read_slice(io, (path, "data"), int(offs[0]), int(offs[-1]), phase + 1)
             return A.VarBinaryArray(typ, validity, offs - offs[0], np.asarray(data))
         if isinstance(typ, T.List):
-            offs = self._offsets_vector(path, lo, hi, phase)
-            child = self._take_node(typ.child, path + ".item", int(offs[0]), int(offs[-1]), phase + 1)
+            offs = self._offsets_vector(io, path, lo, hi, phase)
+            child = self._take_node(io, typ.child, path + ".item", int(offs[0]), int(offs[-1]), phase + 1)
             return A.ListArray(typ, validity, offs - offs[0], child)
         if isinstance(typ, T.Struct):
             children = tuple(
-                (nm, self._take_node(ft, path + "." + nm, lo, hi, phase))
+                (nm, self._take_node(io, ft, path + "." + nm, lo, hi, phase))
                 for nm, ft in typ.fields
             )
             return A.StructArray(typ, validity, children)
         raise TypeError(typ)  # pragma: no cover
 
-    def _offsets_vector(self, path: str, lo: int, hi: int, phase: int) -> np.ndarray:
-        raw = self._read_slice((path, "offsets"), lo * 8, (hi + 1) * 8, phase)
+    def _offsets_vector(self, io, path: str, lo: int, hi: int, phase: int) -> np.ndarray:
+        raw = self._read_slice(io, (path, "offsets"), lo * 8, (hi + 1) * 8, phase)
         return np.frombuffer(raw.tobytes(), np.int64, count=hi - lo + 1).copy()
 
-    def _offsets_range(self, path, lo, hi, phase):
-        offs = self._offsets_vector(path, lo, hi, phase)
+    def _offsets_range(self, io, path, lo, hi, phase):
+        offs = self._offsets_vector(io, path, lo, hi, phase)
         return int(offs[0]), int(offs[-1])
 
     # -- scan ----------------------------------------------------------------
-    def scan(self) -> A.Array:
+    def scan(self, io) -> A.Array:
         self._full_cache = {}
-        arr = self._scan_node(self.type, "c")
+        arr = self._scan_node(io, self.type, "c")
         return arr
 
-    def _scan_node(self, typ: T.DataType, path: str) -> A.Array:
+    def _scan_node(self, io, typ: T.DataType, path: str) -> A.Array:
         if typ.nullable:
-            raw = self._read_full((path, "validity"))
+            raw = self._read_full(io, (path, "validity"))
             n = self.bufs[(path, "validity")].len
             validity = np.unpackbits(raw, bitorder="little")[:n].astype(bool)
         else:
             n = None
             validity = None
         if isinstance(typ, T.Primitive):
-            raw = self._read_full((path, "values"))
+            raw = self._read_full(io, (path, "values"))
             vals = np.frombuffer(raw.tobytes(), np.dtype(typ.dtype))
             n = self.bufs[(path, "values")].len
             vals = vals[:n]
             v = validity if validity is not None else np.ones(n, bool)
             return A.PrimitiveArray(typ, v, vals)
         if isinstance(typ, T.FixedSizeList):
-            raw = self._read_full((path, "values"))
+            raw = self._read_full(io, (path, "values"))
             n = self.bufs[(path, "values")].len
             vals = np.frombuffer(raw.tobytes(), np.dtype(typ.child.dtype))[: n * typ.size]
             v = validity if validity is not None else np.ones(n, bool)
             return A.FixedSizeListArray(typ, v, vals.reshape(n, typ.size))
         if isinstance(typ, (T.Utf8, T.Binary)):
-            offs_raw = self._read_full((path, "offsets"))
+            offs_raw = self._read_full(io, (path, "offsets"))
             n = self.bufs[(path, "offsets")].len - 1
             offs = np.frombuffer(offs_raw.tobytes(), np.int64, count=n + 1)
-            data = self._read_full((path, "data"))[: int(offs[-1])]
+            data = self._read_full(io, (path, "data"))[: int(offs[-1])]
             v = validity if validity is not None else np.ones(n, bool)
             return A.VarBinaryArray(typ, v, offs.copy(), np.asarray(data))
         if isinstance(typ, T.List):
-            offs_raw = self._read_full((path, "offsets"))
+            offs_raw = self._read_full(io, (path, "offsets"))
             n = self.bufs[(path, "offsets")].len - 1
             offs = np.frombuffer(offs_raw.tobytes(), np.int64, count=n + 1)
-            child = self._scan_node(typ.child, path + ".item")
+            child = self._scan_node(io, typ.child, path + ".item")
             v = validity if validity is not None else np.ones(n, bool)
             return A.ListArray(typ, v, offs.copy(), child)
         if isinstance(typ, T.Struct):
-            children = tuple((nm, self._scan_node(ft, path + "." + nm)) for nm, ft in typ.fields)
+            children = tuple((nm, self._scan_node(io, ft, path + "." + nm)) for nm, ft in typ.fields)
             n = len(children[0][1])
             v = validity if validity is not None else np.ones(n, bool)
             return A.StructArray(typ, v, children)

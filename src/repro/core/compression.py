@@ -28,8 +28,23 @@ try:
 
     _ZSTD_C = _zstd.ZstdCompressor(level=1)
     _ZSTD_D = _zstd.ZstdDecompressor()
-except Exception:  # pragma: no cover
+except Exception:
+    # no zstandard on this interpreter: stdlib zlib stands in (same opaque
+    # block-compressor class; only the ratio/speed constants differ)
+    import zlib as _zlib
+
     _zstd = None
+
+    class _ZlibCompressor:
+        def compress(self, b: bytes) -> bytes:
+            return _zlib.compress(b, 1)
+
+    class _ZlibDecompressor:
+        def decompress(self, b: bytes) -> bytes:
+            return _zlib.decompress(b)
+
+    _ZSTD_C = _ZlibCompressor()
+    _ZSTD_D = _ZlibDecompressor()
 
 __all__ = [
     "Encoded",

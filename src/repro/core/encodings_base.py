@@ -2,9 +2,11 @@
 
 A structural encoding turns one :class:`~repro.core.shred.ShreddedLeaf` (or,
 for the Arrow-style baseline, the original nested array) into a contiguous
-byte payload ("column chunk" / Lance "disk page") plus metadata.  Readers run
-against a :class:`~repro.core.io_sim.IOTracker` so every experiment gets exact
-IOPS / read-amplification accounting.
+byte payload ("column chunk" / Lance "disk page") plus metadata.  Readers
+issue every read through the :class:`~repro.store.ReadBatch` handle the file
+layer passes to ``take``/``scan``, so the batched IO scheduler owns
+coalescing, tier classification and exact IOPS / read-amplification
+accounting.
 
 Readers return leaf *slices* as ``(rep, defs, values)`` aligned entry streams
 for the requested rows; ``repro.core.shred.unshred`` turns those back into
@@ -19,7 +21,6 @@ from typing import Dict, Optional
 import numpy as np
 
 from . import arrays as A
-from .io_sim import IOTracker
 from .shred import ShreddedLeaf
 
 __all__ = ["EncodedColumn", "ColumnReader", "align8", "pad_to", "leaf_slice", "avg_value_bytes"]
@@ -49,20 +50,20 @@ class EncodedColumn:
 class ColumnReader:
     """Random access + scan against an encoded column.
 
-    ``base`` is the payload's offset inside the file; all reads go through the
-    tracker.
+    ``base`` is the payload's offset inside the file; all reads go through
+    the ``io`` handle (a :class:`~repro.store.ReadBatch`) supplied per
+    operation by the file layer.
     """
 
-    def __init__(self, meta: Dict, base: int, tracker: IOTracker, leaf_proto: ShreddedLeaf):
+    def __init__(self, meta: Dict, base: int, leaf_proto: ShreddedLeaf):
         self.meta = meta
         self.base = base
-        self.tracker = tracker
         self.proto = leaf_proto  # carries path/type_path/max levels, no data
 
-    def take(self, rows: np.ndarray) -> ShreddedLeaf:
+    def take(self, rows: np.ndarray, io) -> ShreddedLeaf:
         raise NotImplementedError
 
-    def scan(self) -> ShreddedLeaf:
+    def scan(self, io) -> ShreddedLeaf:
         raise NotImplementedError
 
 

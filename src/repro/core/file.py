@@ -29,7 +29,7 @@ from .adaptive import choose_encoding
 from .arrow_like import ArrowReader, encode_arrow
 from .encodings_base import EncodedColumn
 from .fullzip import FullZipReader, encode_fullzip
-from .io_sim import Disk, IOTracker
+from .io_sim import Disk
 from .miniblock import MiniBlockReader, encode_miniblock
 from .packing import PackedStructReader, encode_packed_struct
 from .parquet_like import ParquetReader, encode_parquet
@@ -234,13 +234,30 @@ _READERS = {
 
 
 class FileReader:
-    def __init__(self, file_bytes_or_disk, dict_cached: bool = False):
+    """Reads a Lance-style file through the tiered storage subsystem.
+
+    ``store`` selects the tier stack (see :func:`repro.store.make_store`):
+    ``None``/"flat" prices every read on NVMe (seed behaviour), "flat-s3" is
+    a cold object store, "tiered" an NVMe block cache over S3, "hot" RAM
+    over NVMe over S3.  To customize capacities/policies pass a callable
+    ``disk -> TieredStore``; a ready ``TieredStore`` instance is accepted
+    only together with the ``Disk`` it wraps (bytes input always builds a
+    fresh disk, so a pre-built store cannot match it).  Every
+    ``take``/``scan`` runs as one scheduler :class:`~repro.store.ReadBatch`.
+    """
+
+    def __init__(self, file_bytes_or_disk, dict_cached: bool = False,
+                 store=None, queue_depth: int = 256, readahead="auto"):
+        from ..store import IOScheduler, make_store
+
         if isinstance(file_bytes_or_disk, (bytes, bytearray)):
             disk = Disk.from_bytes(bytes(file_bytes_or_disk))
         else:
             disk = file_bytes_or_disk
         self.disk = disk
-        self.tracker = IOTracker(disk)
+        self.store = make_store(store, disk)
+        self.scheduler = IOScheduler(self.store, queue_depth=queue_depth,
+                                     readahead=readahead)
         raw_tail = disk.read(len(disk) - 12, 12)
         assert raw_tail[-4:].tobytes() == MAGIC, "bad magic"
         (flen,) = _struct.unpack("<Q", raw_tail[:8].tobytes())
@@ -260,10 +277,10 @@ class FileReader:
         out = []
         if col["kind"] == "arrow":
             lm = col["leaves"][0]
-            out.append(ArrowReader(lm["meta"], lm["base"], self.tracker, typ))
+            out.append(ArrowReader(lm["meta"], lm["base"], typ))
         elif col["kind"] == "packed":
             lm = col["leaves"][0]
-            out.append(PackedStructReader(lm["meta"], lm["base"], self.tracker, typ))
+            out.append(PackedStructReader(lm["meta"], lm["base"], typ))
         else:
             protos = {tuple(p): tp for p, tp in leaf_paths(typ)}
             for lm in col["leaves"]:
@@ -273,10 +290,10 @@ class FileReader:
                 enc = lm["meta"]["encoding"]
                 cls = _READERS[enc]
                 if enc == "parquet":
-                    out.append(cls(lm["meta"], lm["base"], self.tracker, proto,
+                    out.append(cls(lm["meta"], lm["base"], proto,
                                    dict_cached=self.dict_cached))
                 else:
-                    out.append(cls(lm["meta"], lm["base"], self.tracker, proto))
+                    out.append(cls(lm["meta"], lm["base"], proto))
         self._readers[name] = out
         return out
 
@@ -286,23 +303,28 @@ class FileReader:
         col = self.columns[name]
         typ = type_from_dict(col["type"])
         readers = self._leaf_readers(name)
-        if col["kind"] in ("arrow", "packed"):
-            return readers[0].take(rows)
-        leaves = [r.take(rows) for r in readers]
+        with self.scheduler.batch(f"take:{name}") as io:
+            if col["kind"] in ("arrow", "packed"):
+                return readers[0].take(rows, io)
+            leaves = [r.take(rows, io) for r in readers]
         return unshred(leaves, typ)
 
-    def scan(self, name: str) -> A.Array:
+    def scan(self, name: str, io_chunk: int = 8 << 20) -> A.Array:
         col = self.columns[name]
         typ = type_from_dict(col["type"])
         readers = self._leaf_readers(name)
-        if col["kind"] in ("arrow", "packed"):
-            return readers[0].scan()
-        leaves = [r.scan() for r in readers]
+        with self.scheduler.batch(f"scan:{name}", prefetch=True) as io:
+            if col["kind"] == "arrow":
+                return readers[0].scan(io)
+            if col["kind"] == "packed":
+                return readers[0].scan(io, io_chunk=io_chunk)
+            leaves = [r.scan(io, io_chunk=io_chunk) for r in readers]
         return unshred(leaves, typ)
 
     def scan_packed_field(self, name: str, fields) -> A.Array:
         readers = self._leaf_readers(name)
-        return readers[0].scan(fields=fields)
+        with self.scheduler.batch(f"scan:{name}", prefetch=True) as io:
+            return readers[0].scan(io, fields=fields)
 
     # -- accounting -------------------------------------------------------------
     def search_cache_bytes(self, name: Optional[str] = None) -> int:
@@ -318,10 +340,25 @@ class FileReader:
         return sum(lm["bytes"] for c in cols for lm in c["leaves"])
 
     def reset_io(self):
-        self.tracker.reset()
+        """Zero the logical trace and tier counters.  Cache residency
+        survives — warm tiers stay warm (use :meth:`drop_caches` for a
+        cold restart)."""
+        self.scheduler.reset()
 
     def io_stats(self, coalesce_gap: int = 0):
-        return self.tracker.stats(coalesce_gap)
+        return self.scheduler.stats(coalesce_gap)
+
+    def tier_stats(self):
+        """Per-tier dispatched-IO stats (fastest first, backing last)."""
+        return self.store.tier_stats()
+
+    def modelled_time(self, queue_depth: Optional[int] = None) -> float:
+        """Modelled wall time of all IO since the last reset, priced on the
+        configured tier stack."""
+        return self.scheduler.model_time(queue_depth)
+
+    def drop_caches(self):
+        self.store.drop_caches()
 
 
 def _proto_from(path, type_path, lm) -> ShreddedLeaf:

@@ -236,48 +236,48 @@ class FullZipReader(ColumnReader):
         return rep, defs, vals
 
     # ------------------------------------------------------------------
-    def take(self, rows: np.ndarray) -> ShreddedLeaf:
+    def take(self, rows: np.ndarray, io) -> ShreddedLeaf:
         rows = np.asarray(rows, dtype=np.int64)
         m = self.meta
         reps, dfs, vals = [], [], []
         if not m["has_rep_index"]:
             stride = m["W"] + m["vw"]
             for r in rows:
-                raw = self.tracker.read(self.base + r * stride, stride, phase=0)
+                raw = io.read(self.base + r * stride, stride, phase=0)
                 a, b, c = self._decode_entries(raw)
                 reps.append(a)
                 dfs.append(b)
                 vals.append(c)
-                self.tracker.note_useful(stride)
+                io.note_useful(stride)
         else:
             R = m["R"]
             spans = []
             for r in rows:
                 # one IOP covers both adjacent index entries (start & end)
-                ib = self.tracker.read(self.base + r * R, 2 * R, phase=0)
+                ib = io.read(self.base + r * R, 2 * R, phase=0)
                 lo = int.from_bytes(ib[:R].tobytes(), "little")
                 hi = int.from_bytes(ib[R:].tobytes(), "little")
                 spans.append((lo, hi))
             for lo, hi in spans:
-                raw = self.tracker.read(self.base + m["zip_base"] + lo, hi - lo, phase=1)
+                raw = io.read(self.base + m["zip_base"] + lo, hi - lo, phase=1)
                 a, b, c = self._decode_entries(raw)
                 reps.append(a)
                 dfs.append(b)
                 vals.append(c)
-                self.tracker.note_useful(hi - lo)
+                io.note_useful(hi - lo)
         rep = np.concatenate(reps) if reps and reps[0] is not None else None
         defs = np.concatenate(dfs) if dfs and dfs[0] is not None else None
         values = A.concat(vals)
         return leaf_slice(self.proto, rep, defs, values, len(rows))
 
-    def scan(self, io_chunk: int = 8 << 20) -> ShreddedLeaf:
+    def scan(self, io, io_chunk: int = 8 << 20) -> ShreddedLeaf:
         m = self.meta
         # the repetition index is never read on a full scan (paper 4.1.4)
         total = m["zip_bytes"]
         parts = []
         for p in range(0, total, io_chunk):
             parts.append(
-                self.tracker.read(self.base + m["zip_base"] + p, min(io_chunk, total - p), phase=0)
+                io.read(self.base + m["zip_base"] + p, min(io_chunk, total - p), phase=0)
             )
         raw = np.concatenate(parts) if parts else np.zeros(0, np.uint8)
         rep, defs, vals = self._decode_entries(raw, n_hint=m["n_entries"])

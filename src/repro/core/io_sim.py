@@ -17,11 +17,14 @@ contiguous tile; ``HBM`` below models that regime for the serving path.
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-__all__ = ["Disk", "IOTracker", "IOStats", "DeviceModel", "NVME", "S3", "HBM", "model_time"]
+__all__ = [
+    "Disk", "IOTracker", "IOStats", "DeviceModel", "NVME", "S3", "HBM", "DRAM",
+    "model_time", "merge_phase_extents", "trace_stats",
+]
 
 
 class Disk:
@@ -46,10 +49,22 @@ class Disk:
         return self._size
 
     def read(self, offset: int, size: int) -> np.ndarray:
+        offset, size = int(offset), int(size)
+        if size < 0:
+            raise ValueError(f"negative read size {size}")
+        if offset < 0 or offset + size > self._size:
+            raise ValueError(
+                f"read [{offset}, {offset + size}) out of bounds for "
+                f"{self._size}-byte disk"
+            )
         if self._f is not None:
             self._f.seek(offset)
-            return np.frombuffer(self._f.read(size), dtype=np.uint8)
-        return self._mem[offset : offset + size]
+            buf = self._f.read(size)
+            if len(buf) != size:  # pragma: no cover - backing file shrank
+                raise IOError(f"short read: wanted {size} bytes, got {len(buf)}")
+            return np.frombuffer(buf, dtype=np.uint8).copy()
+        # copy so callers can never alias (or mutate) the backing store
+        return self._mem[offset : offset + size].copy()
 
 
 @dataclasses.dataclass
@@ -63,6 +78,51 @@ class IOStats:
     @property
     def read_amplification(self) -> float:
         return self.bytes_read / self.useful_bytes if self.useful_bytes else float("nan")
+
+
+def merge_phase_extents(
+    ops: Sequence[Tuple[int, int, int]], gap: int = 0
+) -> Dict[int, List[Tuple[int, int]]]:
+    """Merge adjacent/overlapping byte ranges **within each dependency
+    phase**.  Reads at phase p causally depend on reads at phases < p having
+    returned, so cross-phase merging would fabricate requests no scheduler
+    could have issued.  Returns ``{phase: [(lo, hi), ...]}`` sorted by lo;
+    zero-length requests survive as ``(o, o)`` extents (they are still ops)."""
+    by_phase: Dict[int, List[Tuple[int, int]]] = {}
+    for o, sz, p in ops:
+        by_phase.setdefault(int(p), []).append((int(o), int(o) + int(sz)))
+    out: Dict[int, List[Tuple[int, int]]] = {}
+    for p, ivs in by_phase.items():
+        ivs.sort()
+        merged: List[Tuple[int, int]] = []
+        cur: Optional[Tuple[int, int]] = None
+        for a, b in ivs:
+            if cur is None or a > cur[1] + gap:
+                if cur is not None:
+                    merged.append(cur)
+                cur = (a, b)
+            else:
+                cur = (cur[0], max(cur[1], b))
+        if cur is not None:
+            merged.append(cur)
+        out[p] = merged
+    return out
+
+
+def trace_stats(
+    ops: Sequence[Tuple[int, int, int]], useful_bytes: int = 0,
+    coalesce_gap: int = 0,
+) -> IOStats:
+    """IOStats for a logical read trace; single source of truth shared by the
+    legacy :class:`IOTracker` and the batched scheduler in ``repro.store``."""
+    s = IOStats()
+    s.n_iops = len(ops)
+    s.bytes_read = sum(sz for _, sz, _ in ops)
+    s.useful_bytes = int(useful_bytes)
+    # an empty trace has depth 0; otherwise depth = deepest phase + 1
+    s.max_phase = max((p for _, _, p in ops), default=-1) + 1
+    s.n_coalesced = sum(len(v) for v in merge_phase_extents(ops, coalesce_gap).values())
+    return s
 
 
 class IOTracker:
@@ -88,23 +148,7 @@ class IOTracker:
         self._useful = 0
 
     def stats(self, coalesce_gap: int = 0) -> IOStats:
-        s = IOStats()
-        s.n_iops = len(self.ops)
-        s.bytes_read = sum(sz for _, sz, _ in self.ops)
-        s.useful_bytes = getattr(self, "_useful", 0)
-        s.max_phase = max((p for _, _, p in self.ops), default=-1) + 1
-        # coalescing: merge requests whose byte ranges are within gap
-        ivs = sorted((o, o + sz) for o, sz, _ in self.ops)
-        merged = 0
-        cur_end = None
-        for a, b in ivs:
-            if cur_end is None or a > cur_end + coalesce_gap:
-                merged += 1
-                cur_end = b
-            else:
-                cur_end = max(cur_end, b)
-        s.n_coalesced = merged
-        return s
+        return trace_stats(self.ops, getattr(self, "_useful", 0), coalesce_gap)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -124,6 +168,8 @@ NVME = DeviceModel("nvme_970evo", 850_000, 3400 * (1 << 20), 90e-6, 4096)
 S3 = DeviceModel("s3", 20_000, 10 * (1 << 30), 30e-3, 100 * 1024)
 # TPU HBM: an "IOP" is a DMA tile; bandwidth 819 GB/s (v5e), ~1 us issue.
 HBM = DeviceModel("tpu_hbm", 2_000_000, 819e9, 1e-6, 512)
+# Host DRAM (the tiered store's RAM-hot tier): a cache-line-granular copy.
+DRAM = DeviceModel("dram", 10_000_000, 25 * (1 << 30), 2e-7, 64)
 
 
 def model_time(stats: IOStats, dev: DeviceModel, queue_depth: int = 256,

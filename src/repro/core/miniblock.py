@@ -32,7 +32,6 @@ from . import arrays as A
 from . import types as T
 from .compression import Encoded, get_bytes_codec, get_fixed_codec, min_bits
 from .encodings_base import ColumnReader, EncodedColumn, leaf_slice, pad_to
-from .io_sim import IOTracker
 from .rdlevels import level_bits, pack_levels, unpack_levels
 from .shred import ShreddedLeaf
 
@@ -284,7 +283,7 @@ class MiniBlockReader(ColumnReader):
             need[int(r)] = list(range(c0, min(c1, n_chunks - 1) + 1))
         return need
 
-    def take(self, rows: np.ndarray) -> ShreddedLeaf:
+    def take(self, rows: np.ndarray, io) -> ShreddedLeaf:
         rows = np.asarray(rows, dtype=np.int64)
         order = np.argsort(rows, kind="stable")
         srows = rows[order]
@@ -294,7 +293,7 @@ class MiniBlockReader(ColumnReader):
         sizes = [self.meta["chunks"][c]["words"] * 8 for c in all_chunks]
         raws = {}
         for c, sz in zip(all_chunks, sizes):
-            raws[c] = self.tracker.read(self.base + offs[c], sz, phase=0)
+            raws[c] = io.read(self.base + offs[c], sz, phase=0)
         decoded = {c: self._decode_chunk(c, raws[c]) for c in all_chunks}
 
         rep_parts, def_parts, val_parts, nrows = [], [], [], 0
@@ -328,16 +327,16 @@ class MiniBlockReader(ColumnReader):
         rep = np.concatenate(rep_parts) if rep_parts and rep_parts[0] is not None else None
         defs = np.concatenate(def_parts) if def_parts and def_parts[0] is not None else None
         vals = A.concat(val_parts)
-        self.tracker.note_useful(int(sum(len(v.data) if isinstance(v, A.VarBinaryArray) else v.values.nbytes for v in val_parts)))
+        io.note_useful(int(sum(len(v.data) if isinstance(v, A.VarBinaryArray) else v.values.nbytes for v in val_parts)))
         out = leaf_slice(self.proto, rep, defs, vals, len(rows))
         return _reorder_rows(out, np.argsort(order, kind="stable"))
 
-    def scan(self, io_chunk: int = 8 << 20) -> ShreddedLeaf:
+    def scan(self, io, io_chunk: int = 8 << 20) -> ShreddedLeaf:
         offs = self.meta["chunk_offsets"]
         total = (offs[-1] + self.meta["chunks"][-1]["words"] * 8) if offs else 0
         raw_parts = []
         for p in range(0, total, io_chunk):
-            raw_parts.append(self.tracker.read(self.base + p, min(io_chunk, total - p), phase=0))
+            raw_parts.append(io.read(self.base + p, min(io_chunk, total - p), phase=0))
         raw = np.concatenate(raw_parts) if raw_parts else np.zeros(0, np.uint8)
         reps, dfs, vals = [], [], []
         for ci, off in enumerate(offs):

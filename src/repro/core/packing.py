@@ -22,7 +22,6 @@ from . import arrays as A
 from . import types as T
 from .compression import Encoded, get_fixed_codec
 from .encodings_base import EncodedColumn
-from .io_sim import IOTracker
 
 __all__ = ["encode_packed_struct", "PackedStructReader"]
 
@@ -67,10 +66,9 @@ def encode_packed_struct(arr: A.StructArray, fixed_codec: str = "plain") -> Enco
 
 
 class PackedStructReader:
-    def __init__(self, meta: Dict, base: int, tracker: IOTracker, typ: T.Struct):
+    def __init__(self, meta: Dict, base: int, typ: T.Struct):
         self.meta = meta
         self.base = base
-        self.tracker = tracker
         self.type = typ
 
     def _decode_rows(self, raw: np.ndarray, n: int, fields=None) -> A.StructArray:
@@ -108,20 +106,20 @@ class PackedStructReader:
         )
         return A.StructArray(typ, validity, tuple(children))
 
-    def take(self, rows: np.ndarray) -> A.StructArray:
+    def take(self, rows: np.ndarray, io) -> A.StructArray:
         stride = self.meta["stride"]
         parts = []
         for r in np.asarray(rows, dtype=np.int64):
-            raw = self.tracker.read(self.base + int(r) * stride, stride, phase=0)
+            raw = io.read(self.base + int(r) * stride, stride, phase=0)
             parts.append(self._decode_rows(raw, 1))
-            self.tracker.note_useful(stride)
+            io.note_useful(stride)
         return A.concat(parts)
 
-    def scan(self, fields=None, io_chunk: int = 8 << 20) -> A.StructArray:
+    def scan(self, io, fields=None, io_chunk: int = 8 << 20) -> A.StructArray:
         n = self.meta["n_rows"]
         total = n * self.meta["stride"]
         parts = []
         for p in range(0, total, io_chunk):
-            parts.append(self.tracker.read(self.base + p, min(io_chunk, total - p), phase=0))
+            parts.append(io.read(self.base + p, min(io_chunk, total - p), phase=0))
         raw = np.concatenate(parts) if parts else np.zeros(0, np.uint8)
         return self._decode_rows(raw, n, fields=fields)

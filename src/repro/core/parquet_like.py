@@ -193,21 +193,21 @@ def _parse_page(raw: np.ndarray) -> List[np.ndarray]:
 
 
 class ParquetReader(ColumnReader):
-    def __init__(self, meta, base, tracker, leaf_proto, dict_cached: bool = False):
-        super().__init__(meta, base, tracker, leaf_proto)
+    def __init__(self, meta, base, leaf_proto, dict_cached: bool = False):
+        super().__init__(meta, base, leaf_proto)
         self.dict_cached = dict_cached
         self._dict_cache = None
         self._first_rows = np.array([p["first_row"] for p in meta["pages"]], dtype=np.int64)
 
     # -- dictionary -----------------------------------------------------
-    def _load_dict(self, phase: int = 0):
+    def _load_dict(self, io, phase: int = 0):
         # Cold (non-cached) behavior is modelled by take() dropping the cache
         # at the start of each operation; within one operation the dictionary
         # is fetched once.
         if self._dict_cache is not None:
             return self._dict_cache
         dm = self.meta["dict"]
-        raw = self.tracker.read(self.base, self.meta["dict_page_bytes"], phase=phase)
+        raw = io.read(self.base, self.meta["dict_page_bytes"], phase=phase)
         if dm["kind"] == "var":
             n, lb_sz = struct.unpack_from("<II", raw.tobytes(), 0)
             pos = 8
@@ -233,7 +233,7 @@ class ParquetReader(ColumnReader):
         return sc
 
     # -- decode ----------------------------------------------------------
-    def _decode_page(self, pi: int, raw: np.ndarray):
+    def _decode_page(self, pi: int, raw: np.ndarray, io):
         pm = self.meta["pages"][pi]
         bufs = _parse_page(raw)
         k = pm["n_entries"]
@@ -247,7 +247,7 @@ class ParquetReader(ColumnReader):
             bi += 1
         if self.meta["dict"] is not None:
             codes = bitunpack(bufs[bi], pm["n_values"], pm["bufmeta"][bi]["cbits"]).astype(np.int64)
-            d = self._load_dict(phase=0)
+            d = self._load_dict(io, phase=0)
             if d[0] == "var":
                 _, offs, data = d
                 lens = (offs[1:] - offs[:-1])[codes]
@@ -278,19 +278,19 @@ class ParquetReader(ColumnReader):
         return rep, defs, vals
 
     # -- access ----------------------------------------------------------
-    def take(self, rows: np.ndarray) -> ShreddedLeaf:
+    def take(self, rows: np.ndarray, io) -> ShreddedLeaf:
         rows = np.asarray(rows, dtype=np.int64)
         if self.meta["dict"] is not None and not self.dict_cached:
             self._dict_cache = None  # cold: must refetch per take (parquet-rs behavior)
-            self._load_dict(phase=0)
+            self._load_dict(io, phase=0)
         pis = np.searchsorted(self._first_rows, rows, side="right") - 1
         reps, dfs, vals = [], [], []
         decoded: Dict[int, tuple] = {}
         for pi in sorted(set(int(p) for p in pis)):
             off = self.meta["page_offsets"][pi]
             sz = self.meta["pages"][pi]["size"]
-            raw = self.tracker.read(self.base + off, sz, phase=0)
-            decoded[pi] = self._decode_page(pi, raw)
+            raw = io.read(self.base + off, sz, phase=0)
+            decoded[pi] = self._decode_page(pi, raw, io)
         for r, pi in zip(rows, pis):
             rep, defs, v = decoded[int(pi)]
             pm = self.meta["pages"][int(pi)]
@@ -306,27 +306,27 @@ class ParquetReader(ColumnReader):
             dfs.append(defs[sel] if defs is not None else None)
             vv = v.take(vslot[sel & vmask])
             vals.append(vv)
-            self.tracker.note_useful(
+            io.note_useful(
                 int(len(vv.data) if isinstance(vv, A.VarBinaryArray) else vv.values.nbytes)
             )
         rep = np.concatenate(reps) if reps and reps[0] is not None else None
         defs = np.concatenate(dfs) if dfs and dfs[0] is not None else None
         return leaf_slice(self.proto, rep, defs, A.concat(vals), len(rows))
 
-    def scan(self, io_chunk: int = 8 << 20) -> ShreddedLeaf:
+    def scan(self, io, io_chunk: int = 8 << 20) -> ShreddedLeaf:
         if self.meta["dict"] is not None:
-            self._load_dict(phase=0)
+            self._load_dict(io, phase=0)
         offs = self.meta["page_offsets"]
         total = (offs[-1] + self.meta["pages"][-1]["size"]) if offs else 0
         start = self.meta["dict_page_bytes"]
         parts = []
         for p in range(start, total, io_chunk):
-            parts.append(self.tracker.read(self.base + p, min(io_chunk, total - p), phase=0))
+            parts.append(io.read(self.base + p, min(io_chunk, total - p), phase=0))
         raw = np.concatenate(parts) if parts else np.zeros(0, np.uint8)
         reps, dfs, vals = [], [], []
         for pi, off in enumerate(offs):
             sz = self.meta["pages"][pi]["size"]
-            r, d, v = self._decode_page(pi, raw[off - start : off - start + sz])
+            r, d, v = self._decode_page(pi, raw[off - start : off - start + sz], io)
             reps.append(r)
             dfs.append(d)
             vals.append(v)

@@ -77,10 +77,17 @@ class BatchedEngine:
 class Retriever:
     """Random-access retrieval over a Lance file: the search-path consumer
     (§1: 'search workloads fetch small subsets not aligned with the
-    clustered index')."""
+    clustered index').
 
-    def __init__(self, file_bytes: bytes, column: str = "embedding"):
-        self.reader = FileReader(file_bytes)
+    ``store`` selects the tier stack (see :func:`repro.store.make_store`):
+    the serving deployment shape is ``store="tiered"`` — an NVMe block cache
+    over S3 that turns the hot working set into NVMe-priced reads while cold
+    rows pay the object-store round trip.
+    """
+
+    def __init__(self, file_bytes: bytes, column: str = "embedding",
+                 store=None):
+        self.reader = FileReader(file_bytes, store=store)
         self.column = column
 
     def fetch(self, row_ids: np.ndarray):
@@ -88,3 +95,10 @@ class Retriever:
         self.reader.reset_io()
         out = self.reader.take(self.column, np.asarray(row_ids, np.int64))
         return out, self.reader.io_stats()
+
+    def tier_stats(self):
+        """Per-tier dispatched-IO stats since the last fetch."""
+        return self.reader.tier_stats()
+
+    def modelled_time(self) -> float:
+        return self.reader.modelled_time()

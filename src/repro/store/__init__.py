@@ -1,0 +1,16 @@
+# Tiered storage: NVMe block cache over S3 with an async batched IO
+# scheduler.  Sits between the structural encodings and the raw Disk —
+# FileReader opens a ReadBatch per take/scan, the scheduler coalesces per
+# dependency phase, sector-aligns, classifies against the cache hierarchy
+# and prices each tier with the paper's Fig-1 device models.
+
+from .cache import BlockCache  # noqa: F401
+from .prefetch import SequentialReadahead  # noqa: F401
+from .scheduler import (  # noqa: F401
+    CacheTier,
+    IOScheduler,
+    ReadBatch,
+    TieredStore,
+    make_store,
+)
+from .stats import TierStats  # noqa: F401

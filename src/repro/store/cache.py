@@ -1,0 +1,140 @@
+"""Sector-granular block cache with pluggable eviction + admission.
+
+The cache fronts a slow backing device (S3) with a fast one (NVMe, RAM).
+It tracks *residency only* — block ids over the backing address space, at
+``block_bytes`` (one device sector by default) granularity; actual bytes
+always come from the simulated :class:`~repro.core.io_sim.Disk`, the cache
+decides which tier a block's read is priced on.
+
+Eviction policies:
+
+* ``clock`` — second-chance ring (one ref bit per slot); constant-time and
+  scan-resistant enough for the paper's take-heavy workloads.
+* ``lru`` — classic recency order, for comparison.
+
+Admission policies:
+
+* ``always`` — admit every missed block (default).
+* ``second_touch`` — admit a block only on its second miss within the ghost
+  window (a bounded FIFO of recently-seen block ids, 8x the cache's slot
+  count).  Protects the cache from single-pass scan flooding.
+"""
+
+from __future__ import annotations
+
+from collections import OrderedDict
+from typing import Dict, List
+
+__all__ = ["BlockCache"]
+
+
+class BlockCache:
+    def __init__(
+        self,
+        capacity_bytes: int,
+        block_bytes: int = 4096,
+        policy: str = "clock",
+        admission: str = "always",
+    ):
+        if block_bytes <= 0:
+            raise ValueError("block_bytes must be positive")
+        if capacity_bytes < block_bytes:
+            raise ValueError("cache smaller than one block")
+        if policy not in ("clock", "lru"):
+            raise ValueError(f"unknown eviction policy {policy!r}")
+        if admission not in ("always", "second_touch"):
+            raise ValueError(f"unknown admission policy {admission!r}")
+        self.block_bytes = int(block_bytes)
+        self.capacity_blocks = int(capacity_bytes) // self.block_bytes
+        self.policy = policy
+        self.admission = admission
+        self.hits = 0
+        self.misses = 0
+        self.evictions = 0
+        # lru state
+        self._lru: "OrderedDict[int, None]" = OrderedDict()
+        # clock state
+        self._slot_of: Dict[int, int] = {}
+        self._blocks: List[int] = []
+        self._ref: List[int] = []
+        self._hand = 0
+        # second-touch ghost list (ids seen once, not yet admitted)
+        self._ghost: "OrderedDict[int, None]" = OrderedDict()
+        self._ghost_cap = 8 * self.capacity_blocks
+
+    # -- residency ---------------------------------------------------------
+    def __len__(self) -> int:
+        return len(self._lru) if self.policy == "lru" else len(self._slot_of)
+
+    def __contains__(self, block_id: int) -> bool:
+        return block_id in (self._lru if self.policy == "lru" else self._slot_of)
+
+    @property
+    def resident_bytes(self) -> int:
+        return len(self) * self.block_bytes
+
+    # -- access ------------------------------------------------------------
+    def lookup(self, block_id: int) -> bool:
+        """Hit test; updates recency/ref state and hit/miss counters."""
+        if self.policy == "lru":
+            if block_id in self._lru:
+                self._lru.move_to_end(block_id)
+                self.hits += 1
+                return True
+        else:
+            slot = self._slot_of.get(block_id)
+            if slot is not None:
+                self._ref[slot] = 1
+                self.hits += 1
+                return True
+        self.misses += 1
+        return False
+
+    def admit(self, block_id: int) -> bool:
+        """Maybe-insert a block after a miss; returns True if now resident."""
+        if block_id in self:
+            return True
+        if self.admission == "second_touch":
+            if block_id not in self._ghost:
+                self._ghost[block_id] = None
+                while len(self._ghost) > self._ghost_cap:
+                    self._ghost.popitem(last=False)
+                return False
+            del self._ghost[block_id]
+        if self.policy == "lru":
+            if len(self._lru) >= self.capacity_blocks:
+                self._lru.popitem(last=False)
+                self.evictions += 1
+            self._lru[block_id] = None
+            return True
+        # clock: insert with a clear ref bit — only a subsequent lookup
+        # earns the block its second chance
+        if len(self._blocks) < self.capacity_blocks:
+            self._slot_of[block_id] = len(self._blocks)
+            self._blocks.append(block_id)
+            self._ref.append(0)
+            return True
+        while self._ref[self._hand]:
+            self._ref[self._hand] = 0
+            self._hand = (self._hand + 1) % self.capacity_blocks
+        victim = self._blocks[self._hand]
+        del self._slot_of[victim]
+        self.evictions += 1
+        self._blocks[self._hand] = block_id
+        self._slot_of[block_id] = self._hand
+        self._ref[self._hand] = 0
+        self._hand = (self._hand + 1) % self.capacity_blocks
+        return True
+
+    # -- management ---------------------------------------------------------
+    def drop(self) -> None:
+        """Discard all resident blocks (counters are kept)."""
+        self._lru.clear()
+        self._slot_of.clear()
+        self._blocks = []
+        self._ref = []
+        self._hand = 0
+        self._ghost.clear()
+
+    def reset_stats(self) -> None:
+        self.hits = self.misses = self.evictions = 0

@@ -1,0 +1,351 @@
+"""Batched IO scheduler + tiered store: the layer between the structural
+encodings and the raw :class:`~repro.core.io_sim.Disk`.
+
+The read path no longer talks to a device directly.  `FileReader` opens a
+:class:`ReadBatch` per ``take``/``scan`` and hands it to the encoding
+readers; every logical read goes through :meth:`ReadBatch.read`, which serves
+bytes synchronously (the data plane is the simulated disk) and records the
+request.  When the batch closes, the scheduler:
+
+1. **coalesces** the batch's requests per dependency phase (the paper's
+   'issued in N phases'), subsuming the post-hoc merging that used to be
+   buried in ``IOTracker.stats``;
+2. **aligns** each coalesced extent to device sectors;
+3. **classifies** each sector against the cache hierarchy (RAM-hot →
+   NVMe-warm → S3-cold) and dispatches per-tier, per-phase ops with
+   queue-depth-limited round-trip pricing;
+4. optionally runs **readahead** (scan batches) to pull upcoming sectors
+   into the cache ahead of demand.
+
+Accounting is two-plane by design: :meth:`IOScheduler.stats` reports the
+*logical* trace (identical numbers to the legacy ``IOTracker``, so no
+experiment regresses), while :meth:`TieredStore.tier_stats` reports what
+each *device* actually served (aligned bytes, hits/misses, prefetch).
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Sequence, Tuple, Union
+
+import numpy as np
+
+from ..core.io_sim import (
+    DRAM,
+    NVME,
+    S3,
+    DeviceModel,
+    Disk,
+    IOStats,
+    merge_phase_extents,
+    trace_stats,
+)
+from .cache import BlockCache
+from .prefetch import SequentialReadahead
+from .stats import TierStats
+
+__all__ = ["CacheTier", "TieredStore", "ReadBatch", "IOScheduler", "make_store"]
+
+DEFAULT_SECTOR = 4096
+DEFAULT_CACHE_BYTES = 64 << 20
+
+
+class CacheTier:
+    """One cache level: a fast device pricing blocks resident in ``cache``."""
+
+    def __init__(self, device: DeviceModel, cache: BlockCache, name: Optional[str] = None):
+        self.device = device
+        self.cache = cache
+        self.stats = TierStats(name or device.name)
+
+
+class TieredStore:
+    """A stack of cache tiers (fastest first) over one backing device.
+
+    The store prices reads; bytes always come from ``disk``.  A block served
+    by tier i is admitted into every faster tier (inclusive promotion); a
+    block missing everywhere is read from the backing device and admitted
+    into all tiers.
+    """
+
+    def __init__(
+        self,
+        disk: Disk,
+        backing: DeviceModel = NVME,
+        levels: Sequence[CacheTier] = (),
+        sector: int = DEFAULT_SECTOR,
+    ):
+        self.disk = disk
+        self.backing = backing
+        self.backing_stats = TierStats(backing.name)
+        self.levels: List[CacheTier] = list(levels)
+        self.sector = int(sector)
+        for lvl in self.levels:
+            if lvl.cache.block_bytes != self.sector:
+                raise ValueError("cache block size must equal the store sector")
+
+    # -- constructors -------------------------------------------------------
+    @classmethod
+    def flat(cls, disk: Disk, device: DeviceModel = NVME,
+             sector: int = DEFAULT_SECTOR) -> "TieredStore":
+        """Single-tier store: every read priced on ``device`` (the seed
+        repo's behaviour)."""
+        return cls(disk, backing=device, levels=(), sector=sector)
+
+    @classmethod
+    def cached(
+        cls,
+        disk: Disk,
+        backing: DeviceModel = S3,
+        cache_device: DeviceModel = NVME,
+        cache_bytes: int = DEFAULT_CACHE_BYTES,
+        sector: int = DEFAULT_SECTOR,
+        policy: str = "clock",
+        admission: str = "always",
+    ) -> "TieredStore":
+        """The paper's deployment shape: an NVMe block cache over S3."""
+        cache = BlockCache(cache_bytes, block_bytes=sector, policy=policy,
+                           admission=admission)
+        return cls(disk, backing=backing,
+                   levels=(CacheTier(cache_device, cache),), sector=sector)
+
+    @classmethod
+    def hot(
+        cls,
+        disk: Disk,
+        backing: DeviceModel = S3,
+        ram_bytes: int = 8 << 20,
+        nvme_bytes: int = DEFAULT_CACHE_BYTES,
+        sector: int = DEFAULT_SECTOR,
+    ) -> "TieredStore":
+        """Three tiers: RAM-hot over NVMe-warm over S3-cold."""
+        ram = BlockCache(ram_bytes, block_bytes=sector, policy="lru")
+        nvme = BlockCache(nvme_bytes, block_bytes=sector, policy="clock")
+        return cls(disk, backing=backing,
+                   levels=(CacheTier(DRAM, ram), CacheTier(NVME, nvme)),
+                   sector=sector)
+
+    # -- dispatch ------------------------------------------------------------
+    def dispatch_extent(self, lo: int, hi: int, phase: int,
+                        prefetch: bool = False) -> None:
+        """Price one coalesced extent: sector-align, classify each block
+        against the hierarchy, dispatch contiguous same-tier runs."""
+        lo, hi = int(lo), int(hi)
+        if hi <= lo:
+            return
+        b0 = lo // self.sector
+        b1 = (hi + self.sector - 1) // self.sector
+        if not self.levels:
+            self.backing_stats.add_op((b1 - b0) * self.sector, phase, prefetch)
+            return
+        # classify each block: index into levels, or len(levels) for backing
+        run_tier: Optional[int] = None
+        run_blocks = 0
+
+        def flush() -> None:
+            if run_blocks == 0:
+                return
+            nbytes = run_blocks * self.sector
+            if run_tier == len(self.levels):
+                self.backing_stats.add_op(nbytes, phase, prefetch)
+            else:
+                self.levels[run_tier].stats.add_op(nbytes, phase, prefetch)
+
+        for bid in range(b0, b1):
+            if prefetch:
+                # readahead only fills holes; resident blocks are skipped
+                # without touching hit/miss counters, and a fill is billed
+                # to the backing tier only if the admission policy actually
+                # kept it (the scheduler consults admission before issuing)
+                if any(bid in lvl.cache for lvl in self.levels):
+                    tier = None
+                else:
+                    resident = False
+                    for lvl in self.levels:
+                        resident |= lvl.cache.admit(bid)
+                    tier = len(self.levels) if resident else None
+            else:
+                tier = len(self.levels)
+                for li, lvl in enumerate(self.levels):
+                    if lvl.cache.lookup(bid):
+                        tier = li
+                        break
+                # fill every tier faster than the one that served (on a
+                # backing miss that is all of them)
+                for li in range(min(tier, len(self.levels))):
+                    self.levels[li].cache.admit(bid)
+            if tier != run_tier:
+                flush()
+                run_tier, run_blocks = tier, 0
+            if tier is not None:
+                run_blocks += 1
+        flush()
+
+    def end_batch(self) -> None:
+        """Archive every tier's open batch as one completed queue drain."""
+        self.backing_stats.end_batch()
+        for lvl in self.levels:
+            lvl.stats.end_batch()
+
+    # -- reporting -----------------------------------------------------------
+    def tier_stats(self) -> List[TierStats]:
+        """Per-tier stats, fastest first, backing device last.  Cache
+        hit/miss/eviction counters are folded in from each level's cache.
+        Returns detached snapshots — safe to hold across a later reset."""
+        out: List[TierStats] = []
+        for lvl in self.levels:
+            s = lvl.stats
+            s.hits = lvl.cache.hits
+            s.misses = lvl.cache.misses
+            s.evictions = lvl.cache.evictions
+            out.append(s.snapshot())
+        out.append(self.backing_stats.snapshot())
+        return out
+
+    def model_time(self, queue_depth: int = 256) -> float:
+        """Modelled wall time: each tier serves its share; tiers on the miss
+        path are serial, so the total is the sum of per-tier times."""
+        t = self.backing_stats.model_time(self.backing, queue_depth)
+        for lvl in self.levels:
+            t += lvl.stats.model_time(lvl.device, queue_depth)
+        return t
+
+    def reset_stats(self) -> None:
+        """Zero all counters; cache *contents* survive (warm tiers stay
+        warm — resetting residency is :meth:`drop_caches`)."""
+        self.backing_stats.reset()
+        for lvl in self.levels:
+            lvl.stats.reset()
+            lvl.cache.reset_stats()
+
+    def drop_caches(self) -> None:
+        for lvl in self.levels:
+            lvl.cache.drop()
+
+
+class ReadBatch:
+    """Handle for one ``take``/``scan``'s reads.  Serves bytes synchronously
+    and records the logical trace; dispatch happens when the batch closes."""
+
+    def __init__(self, scheduler: "IOScheduler", label: str = "io",
+                 prefetch: bool = False):
+        self.scheduler = scheduler
+        self.label = label
+        self.prefetch = prefetch
+        self.ops: List[Tuple[int, int, int]] = []
+        self._useful = 0
+        self._closed = False
+
+    def read(self, offset: int, size: int, phase: int = 0) -> np.ndarray:
+        if self._closed:
+            raise RuntimeError("read on a closed ReadBatch")
+        offset, size = int(offset), int(size)
+        self.ops.append((offset, size, phase))
+        return self.scheduler.store.disk.read(offset, size)
+
+    def note_useful(self, nbytes: int) -> None:
+        self._useful += int(nbytes)
+
+    def close(self) -> None:
+        if not self._closed:
+            self._closed = True
+            self.scheduler._finish(self)
+
+    def __enter__(self) -> "ReadBatch":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+
+class IOScheduler:
+    """Accepts whole read batches, coalesces per phase, dispatches through
+    the tiered store, and keeps the legacy logical-trace accounting."""
+
+    def __init__(
+        self,
+        store: TieredStore,
+        queue_depth: int = 256,
+        readahead: Union[str, None, SequentialReadahead] = "auto",
+    ):
+        self.store = store
+        self.queue_depth = int(queue_depth)
+        if readahead == "auto":
+            readahead = SequentialReadahead() if store.levels else None
+        self.readahead = readahead or None
+        self.ops: List[Tuple[int, int, int]] = []
+        self._useful = 0
+        self.n_batches = 0
+
+    def batch(self, label: str = "io", prefetch: bool = False) -> ReadBatch:
+        return ReadBatch(self, label, prefetch=prefetch)
+
+    def _finish(self, batch: ReadBatch) -> None:
+        self.ops.extend(batch.ops)
+        self._useful += batch._useful
+        self.n_batches += 1
+        # Readahead watches the *raw request stream in arrival order* — what
+        # a streaming scheduler sees as the reader issues its chunks — and
+        # its fills land in the cache ahead of the demand drain, so the
+        # demand extents below hit the warm tier instead of the backing one.
+        if batch.prefetch and self.readahead is not None and self.store.levels:
+            disk_len = len(self.store.disk)
+            for o, sz, p in batch.ops:
+                if sz <= 0:
+                    continue
+                pf = self.readahead.observe(o, o + sz)
+                if pf is not None:
+                    plo, phi = pf[0], min(pf[1], disk_len)
+                    if phi > plo:
+                        self.store.dispatch_extent(plo, phi, p, prefetch=True)
+        extents = merge_phase_extents(batch.ops, gap=0)
+        for phase in sorted(extents):
+            for lo, hi in extents[phase]:
+                self.store.dispatch_extent(lo, hi, phase)
+        # each batch is its own queue drain: later batches pay their own
+        # dependency round trips even though phase numbers restart at 0
+        self.store.end_batch()
+
+    # -- accounting ----------------------------------------------------------
+    def stats(self, coalesce_gap: int = 0) -> IOStats:
+        """Logical-trace stats, bit-identical to the legacy ``IOTracker``."""
+        return trace_stats(self.ops, self._useful, coalesce_gap)
+
+    def tier_stats(self) -> List[TierStats]:
+        return self.store.tier_stats()
+
+    def model_time(self, queue_depth: Optional[int] = None) -> float:
+        if queue_depth is None:
+            queue_depth = self.queue_depth
+        return self.store.model_time(queue_depth)
+
+    def reset(self) -> None:
+        self.ops = []
+        self._useful = 0
+        self.n_batches = 0
+        self.store.reset_stats()
+        if self.readahead is not None:
+            self.readahead.reset()
+
+
+def make_store(spec, disk: Disk) -> TieredStore:
+    """Resolve a store spec: None/'flat' (NVMe, seed behaviour), 'flat-s3'
+    (cold object store), 'tiered' (NVMe cache over S3), 'hot' (RAM over NVMe
+    over S3), a callable ``disk -> TieredStore``, or a ready instance."""
+    if spec is None or spec == "flat":
+        return TieredStore.flat(disk)
+    if spec == "flat-s3":
+        return TieredStore.flat(disk, device=S3)
+    if spec == "tiered":
+        return TieredStore.cached(disk)
+    if spec == "hot":
+        return TieredStore.hot(disk)
+    if isinstance(spec, TieredStore):
+        if spec.disk is not disk:
+            raise ValueError("store was built over a different disk")
+        return spec
+    if callable(spec):
+        store = spec(disk)
+        if not isinstance(store, TieredStore):
+            raise TypeError("store factory must return a TieredStore")
+        return store
+    raise ValueError(f"unknown store spec {spec!r}")

@@ -1,0 +1,97 @@
+"""Unified per-tier IO accounting for the tiered store.
+
+Every tier (the backing device and each cache level) carries one
+:class:`TierStats`: dispatched IOPS and bytes (sector-aligned, i.e. what the
+device actually serves), block-granular cache hit/miss/eviction counters, and
+per-phase op counts so queue-depth-limited round trips can be priced.
+
+This replaces the ad-hoc accounting that used to live in benchmark call
+sites: ``model_time`` here is the same first-order device model as
+:func:`repro.core.io_sim.model_time`, extended with a queue-depth term —
+a phase with more outstanding requests than the device queue can hold pays
+one round-trip latency per queue drain, not one per phase.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, List
+
+from ..core.io_sim import DeviceModel
+
+__all__ = ["TierStats"]
+
+
+@dataclasses.dataclass
+class TierStats:
+    """Dispatched-IO counters for one storage tier.
+
+    Dependency round trips are tracked **per batch**: each ``take``/``scan``
+    is its own queue drain, so two sequential batches pay two sets of phase
+    latencies even though their ops share phase numbers.  ``phase_ops`` is
+    the open batch; :meth:`end_batch` archives it into ``batch_phases``.
+    """
+
+    name: str
+    n_iops: int = 0          # dispatched device requests (incl. prefetch)
+    bytes_read: int = 0      # sector-aligned bytes served (incl. prefetch)
+    hits: int = 0            # block lookups served by this tier's cache
+    misses: int = 0          # block lookups that fell through this tier
+    evictions: int = 0       # blocks evicted from this tier's cache
+    prefetch_iops: int = 0   # subset of n_iops issued by readahead
+    prefetch_bytes: int = 0  # subset of bytes_read issued by readahead
+    max_phase: int = 0       # deepest dependency phase seen (+1)
+    phase_ops: Dict[int, int] = dataclasses.field(default_factory=dict)
+    batch_phases: List[Dict[int, int]] = dataclasses.field(default_factory=list)
+
+    @property
+    def hit_rate(self) -> float:
+        n = self.hits + self.misses
+        return self.hits / n if n else float("nan")
+
+    def add_op(self, nbytes: int, phase: int, prefetch: bool = False) -> None:
+        self.n_iops += 1
+        self.bytes_read += int(nbytes)
+        self.phase_ops[int(phase)] = self.phase_ops.get(int(phase), 0) + 1
+        self.max_phase = max(self.max_phase, int(phase) + 1)
+        if prefetch:
+            self.prefetch_iops += 1
+            self.prefetch_bytes += int(nbytes)
+
+    def end_batch(self) -> None:
+        """Close the open batch: its phases become one archived queue drain."""
+        if self.phase_ops:
+            self.batch_phases.append(self.phase_ops)
+            self.phase_ops = {}
+
+    def model_time(self, dev: DeviceModel, queue_depth: int = 256) -> float:
+        """Price this tier's dispatched trace on ``dev``: throughput-limited
+        term plus queue-depth-limited dependency round trips, one drain per
+        (batch, phase)."""
+        if self.n_iops == 0:
+            return 0.0
+        avg = max(self.bytes_read / self.n_iops, 1.0)
+        eff = max(avg, dev.min_read)
+        iops_limit = min(dev.iops_4k, dev.seq_bw / eff)
+        t = max(self.n_iops / iops_limit, self.bytes_read / dev.seq_bw)
+        qd = max(1, queue_depth)
+        for phases in self.batch_phases + [self.phase_ops]:
+            for ops in phases.values():
+                t += math.ceil(ops / qd) * dev.latency
+        return t
+
+    def snapshot(self) -> "TierStats":
+        """Detached copy — safe to hold across a later ``reset()``."""
+        return dataclasses.replace(
+            self, phase_ops=dict(self.phase_ops),
+            batch_phases=[dict(p) for p in self.batch_phases],
+        )
+
+    def reset(self) -> None:
+        self.n_iops = self.bytes_read = 0
+        self.hits = self.misses = self.evictions = 0
+        self.prefetch_iops = self.prefetch_bytes = 0
+        self.max_phase = 0
+        self.phase_ops = {}
+        self.batch_phases = []

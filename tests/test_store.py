@@ -1,0 +1,284 @@
+"""Tiered storage subsystem: block cache, batched scheduler, readahead, and
+the end-to-end tiered read path through FileReader."""
+
+import numpy as np
+import pytest
+
+from repro.core import arrays as A, types as T
+from repro.core.file import FileReader, WriteOptions, write_table
+from repro.core.io_sim import NVME, S3, Disk, IOTracker
+from repro.store import (
+    BlockCache,
+    IOScheduler,
+    SequentialReadahead,
+    TieredStore,
+    make_store,
+)
+
+
+# ---------------------------------------------------------------------------
+# BlockCache
+# ---------------------------------------------------------------------------
+
+
+def test_cache_lru_hit_miss_evict():
+    c = BlockCache(3 * 4096, policy="lru")
+    for b in (0, 1, 2):
+        assert not c.lookup(b)
+        c.admit(b)
+    assert c.lookup(0) and c.lookup(1) and c.lookup(2)
+    assert (c.hits, c.misses, c.evictions) == (3, 3, 0)
+    c.lookup(0)  # 0 is now MRU; 1 is LRU
+    assert not c.lookup(3)
+    c.admit(3)   # evicts 1
+    assert c.evictions == 1
+    assert 1 not in c and 0 in c and 2 in c and 3 in c
+    assert c.resident_bytes == 3 * 4096
+
+
+def test_cache_clock_second_chance():
+    c = BlockCache(2 * 4096, policy="clock")
+    c.admit(0)
+    c.admit(1)
+    c.lookup(0)          # ref bit set on 0
+    c.admit(2)           # clock must spare 0 (referenced) and evict 1
+    assert 0 in c and 2 in c and 1 not in c
+    assert c.evictions == 1
+    assert len(c) == 2
+
+
+def test_cache_second_touch_admission():
+    c = BlockCache(4 * 4096, admission="second_touch")
+    c.lookup(7)
+    assert not c.admit(7)   # first touch: ghost only
+    assert 7 not in c
+    c.lookup(7)
+    assert c.admit(7)       # second touch: admitted
+    assert 7 in c
+
+
+def test_second_touch_holds_through_dispatch():
+    """Regression: the demand dispatch path must consult the admission
+    policy exactly once per miss — a double admit() turned second_touch
+    into always-admit (first call ghosts the id, second 'second-touches'
+    it)."""
+    disk = Disk(np.zeros(64 * 4096, np.uint8))
+    store = TieredStore.cached(disk, cache_bytes=16 * 4096,
+                               admission="second_touch")
+    store.dispatch_extent(0, 4096, phase=0)
+    assert len(store.levels[0].cache) == 0   # first touch: ghost only
+    store.dispatch_extent(0, 4096, phase=0)
+    assert len(store.levels[0].cache) == 1   # second touch: resident
+    assert store.backing_stats.n_iops == 2   # both misses paid the backing
+    store.dispatch_extent(0, 4096, phase=0)
+    assert store.levels[0].cache.hits == 1   # third read is a cache hit
+    # prefetch fills that the policy rejects are not billed to the backing
+    store.dispatch_extent(8 * 4096, 9 * 4096, phase=0, prefetch=True)
+    assert store.backing_stats.prefetch_iops == 0
+    assert len(store.levels[0].cache) == 1
+
+
+def test_cache_rejects_bad_config():
+    with pytest.raises(ValueError):
+        BlockCache(100, block_bytes=4096)
+    with pytest.raises(ValueError):
+        BlockCache(1 << 20, policy="marvellous")
+    with pytest.raises(ValueError):
+        BlockCache(1 << 20, admission="never")
+
+
+# ---------------------------------------------------------------------------
+# scheduler vs. legacy accounting
+# ---------------------------------------------------------------------------
+
+
+def _strings(n):
+    return A.from_pylist([f"value-{i:06d}" * 3 for i in range(n)], T.Utf8(False))
+
+
+@pytest.mark.parametrize("enc", ["lance-miniblock", "lance-fullzip", "parquet",
+                                 "arrow"])
+def test_scheduler_trace_matches_legacy_tracker(enc):
+    """The scheduler's logical stats must be bit-identical to replaying the
+    same trace through the legacy IOTracker (no accounting regression)."""
+    arr = _strings(2000)
+    fb = write_table({"c": arr}, WriteOptions(enc))
+    fr = FileReader(fb)  # flat single-tier store
+    fr.take("c", np.arange(0, 2000, 37))
+    fr.scan("c")
+    tr = IOTracker(fr.disk)
+    for o, sz, p in fr.scheduler.ops:
+        tr.read(o, sz, p)
+    for gap in (0, 64, 4096):
+        a, b = fr.io_stats(gap), tr.stats(gap)
+        assert (a.n_iops, a.bytes_read, a.max_phase, a.n_coalesced) == \
+               (b.n_iops, b.bytes_read, b.max_phase, b.n_coalesced)
+
+
+def test_flat_dispatch_count_equals_coalesced():
+    """On a single-tier store each per-phase coalesced extent becomes exactly
+    one dispatched device op (fixed-width take: no zero-length requests)."""
+    arr = A.PrimitiveArray.build(np.arange(4000, dtype=np.int64), nullable=False)
+    fr = FileReader(write_table({"c": arr}, WriteOptions("lance-fullzip")))
+    fr.take("c", np.random.default_rng(0).choice(4000, 128, replace=False))
+    st = fr.io_stats()
+    backing = fr.tier_stats()[-1]
+    assert backing.n_iops == st.n_coalesced
+    # dispatched bytes are sector-aligned, so never less than logical bytes
+    assert backing.bytes_read >= st.bytes_read
+    assert backing.max_phase == st.max_phase
+
+
+# ---------------------------------------------------------------------------
+# tiered end-to-end
+# ---------------------------------------------------------------------------
+
+
+def test_tiered_take_cold_then_warm():
+    arr = _strings(3000)
+    fb = write_table({"c": arr}, WriteOptions("lance"))
+    rows = np.random.default_rng(1).choice(3000, 200, replace=False)
+    want = [A.to_pylist(arr)[i] for i in rows]
+
+    cold = FileReader(fb, store="flat-s3")
+    cold.take("c", rows)
+    t_cold = cold.modelled_time()
+
+    fr = FileReader(fb, store="tiered")
+    assert A.to_pylist(fr.take("c", rows)) == want  # data plane is unchanged
+    nvme, s3 = fr.tier_stats()
+    assert s3.n_iops > 0 and nvme.misses > 0  # cold pass fills from S3
+
+    fr.reset_io()
+    assert A.to_pylist(fr.take("c", rows)) == want
+    t_warm = fr.modelled_time()
+    nvme, s3 = fr.tier_stats()
+    assert s3.n_iops == 0 and nvme.hit_rate == 1.0  # fully warm
+    assert t_warm < t_cold  # the acceptance headline
+
+    fr.drop_caches()
+    fr.reset_io()
+    fr.take("c", rows)
+    assert fr.tier_stats()[1].n_iops > 0  # cold again after dropping
+
+
+def test_tiered_eviction_under_pressure():
+    arr = A.PrimitiveArray.build(np.arange(200_000, dtype=np.int64),
+                                 nullable=False)
+    fb = write_table({"c": arr}, WriteOptions("lance-fullzip"))
+    tiny = lambda d: TieredStore.cached(d, cache_bytes=8 * 4096)
+    fr = FileReader(fb, store=tiny)
+    fr.take("c", np.arange(0, 200_000, 997))  # way beyond 8 blocks
+    nvme = fr.tier_stats()[0]
+    assert nvme.evictions > 0
+    assert len(fr.store.levels[0].cache) <= 8
+
+
+def test_hot_store_promotes_through_levels():
+    arr = _strings(1000)
+    fr = FileReader(write_table({"c": arr}, WriteOptions("lance")), store="hot")
+    rows = np.arange(0, 1000, 13)
+    fr.take("c", rows)
+    fr.reset_io()
+    fr.take("c", rows)
+    ram, nvme, s3 = fr.tier_stats()
+    assert s3.n_iops == 0        # warm: nothing reaches S3
+    assert ram.hits > 0          # served from the RAM-hot tier
+    assert fr.modelled_time() < 1e-3
+
+
+def test_prefetch_on_full_scan():
+    arr = _strings(20_000)
+    fb = write_table({"c": arr}, WriteOptions("lance-miniblock"))
+    fr = FileReader(fb, store="tiered")
+    # small demand chunks so readahead has a stream to get ahead of
+    got = fr.scan("c", io_chunk=16 * 1024)
+    assert A.to_pylist(got) == A.to_pylist(arr)
+    nvme, s3 = fr.tier_stats()
+    assert s3.prefetch_iops > 0 and s3.prefetch_bytes > 0
+    assert nvme.hits > 0  # demand reads landed on prefetched blocks
+    # prefetch fills holes, it never re-reads: total backing bytes stay
+    # within one readahead window of the demand footprint
+    no_ra = FileReader(fb, store="tiered", readahead=None)
+    no_ra.scan("c", io_chunk=16 * 1024)
+    s3_no_ra = no_ra.tier_stats()[1]
+    assert s3_no_ra.prefetch_iops == 0 and s3_no_ra.hits == 0
+    assert s3.bytes_read <= s3_no_ra.bytes_read + (1 << 20)
+
+
+def test_readahead_policy_unit():
+    ra = SequentialReadahead(window_bytes=1 << 16, min_run=2)
+    assert ra.observe(0, 4096) is None          # first read: no pattern yet
+    pf = ra.observe(4096, 8192)                 # sequential: prefetch ahead
+    assert pf == (8192, 8192 + (1 << 16))
+    # next sequential read slides the window: only the uncovered tail is new
+    assert ra.observe(8192, 12_288) == (8192 + (1 << 16), 12_288 + (1 << 16))
+    ra.reset()
+    assert ra.observe(0, 4096) is None
+    assert ra.observe(1 << 30, (1 << 30) + 4096) is None  # random jump
+
+
+def test_sequential_batches_each_pay_round_trips():
+    """Regression: two sequential takes are two queue drains — the modelled
+    latency term must double, not collapse into one phase bucket."""
+    arr = A.PrimitiveArray.build(np.arange(4000, dtype=np.int64), nullable=False)
+    fb = write_table({"c": arr}, WriteOptions("lance-fullzip"))
+    fr = FileReader(fb, store="flat-s3")
+    rows = np.arange(0, 4000, 31)
+    fr.take("c", rows)
+    t1 = fr.modelled_time()
+    fr.take("c", rows)  # no reset: same counters, second round trip
+    t2 = fr.modelled_time()
+    assert t2 > 1.8 * t1  # S3 latency dominates; each take pays its own
+
+
+def test_tier_stats_snapshots_survive_reset():
+    """Regression: tier_stats() must return detached copies, not the live
+    counters that reset_io() zeroes in place."""
+    arr = _strings(500)
+    fr = FileReader(write_table({"c": arr}, WriteOptions("lance")), store="tiered")
+    fr.take("c", np.arange(0, 500, 7))
+    before = fr.tier_stats()
+    assert before[-1].n_iops > 0
+    saved = before[-1].n_iops
+    fr.reset_io()
+    assert before[-1].n_iops == saved  # snapshot unaffected by the reset
+    assert fr.tier_stats()[-1].n_iops == 0
+
+
+def test_make_store_specs():
+    disk = Disk(np.zeros(1 << 16, np.uint8))
+    assert make_store(None, disk).backing is NVME
+    assert make_store("flat-s3", disk).backing is S3
+    assert len(make_store("tiered", disk).levels) == 1
+    assert len(make_store("hot", disk).levels) == 2
+    with pytest.raises(ValueError):
+        make_store("warmish", disk)
+    with pytest.raises(ValueError):
+        make_store(TieredStore.flat(Disk(np.zeros(8, np.uint8))), disk)
+
+
+def test_batch_rejects_use_after_close():
+    disk = Disk(np.zeros(1 << 16, np.uint8))
+    sched = IOScheduler(TieredStore.flat(disk))
+    with sched.batch("t") as io:
+        io.read(0, 16)
+    with pytest.raises(RuntimeError):
+        io.read(0, 16)
+    assert sched.stats().n_iops == 1
+
+
+def test_retriever_tiered():
+    from repro.data import synth
+    from repro.serve.engine import Retriever
+
+    emb = synth.scenario("embeddings", 1500)
+    fb = write_table({"embedding": emb}, WriteOptions("lance"))
+    r = Retriever(fb, "embedding", store="tiered")
+    ids = np.array([5, 900, 1400])
+    r.fetch(ids)
+    cold = r.modelled_time()
+    _, st = r.fetch(ids)
+    assert st.n_iops == len(ids)  # full-zip fixed width: 1 IOP/row
+    assert r.modelled_time() < cold
+    assert r.tier_stats()[1].n_iops == 0  # warm: no S3 traffic
