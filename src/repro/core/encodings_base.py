@@ -21,9 +21,21 @@ from typing import Dict, Optional
 import numpy as np
 
 from . import arrays as A
+from . import types as T
 from .shred import ShreddedLeaf
 
-__all__ = ["EncodedColumn", "ColumnReader", "align8", "pad_to", "leaf_slice", "avg_value_bytes"]
+__all__ = [
+    "EncodedColumn",
+    "ColumnReader",
+    "align8",
+    "pad_to",
+    "leaf_slice",
+    "avg_value_bytes",
+    "reorder_leaf_rows",
+    "empty_leaf",
+    "empty_values",
+    "value_bytes",
+]
 
 
 def align8(n: int) -> int:
@@ -102,3 +114,71 @@ def row_starts_from_rep(rep: Optional[np.ndarray], max_rep: int, n_entries: int)
     if max_rep == 0 or rep is None:
         return np.ones(n_entries, dtype=bool)
     return rep == max_rep
+
+
+def reorder_leaf_rows(leaf: ShreddedLeaf, order: np.ndarray) -> ShreddedLeaf:
+    """Gather a leaf's rows at ``order`` (any order, duplicates allowed).
+
+    The take pipelines decode each needed row exactly once; this single
+    segment-id permutation then fans the decoded rows back out to the request
+    order.  Everything is one stable argsort-free pass: per-row entry spans
+    come from one cumsum over row starts, the entry permutation from one
+    ``np.repeat``/``arange`` expansion, and the (sparse) value gather from
+    one cumsum over the validity mask — O(entries + output entries) total.
+    """
+    order = np.asarray(order, dtype=np.int64)
+    starts = row_starts_from_rep(leaf.rep, leaf.max_rep, leaf.n_entries)
+    seg = np.cumsum(starts) - 1
+    n_src = int(seg[-1]) + 1 if len(seg) else 0
+    row_lens = np.bincount(seg, minlength=n_src).astype(np.int64) if n_src else np.zeros(0, np.int64)
+    row_offs = np.zeros(n_src + 1, dtype=np.int64)
+    np.cumsum(row_lens, out=row_offs[1:])
+    out_lens = row_lens[order]
+    out_offs = np.zeros(len(order) + 1, dtype=np.int64)
+    np.cumsum(out_lens, out=out_offs[1:])
+    total = int(out_offs[-1])
+    perm = np.repeat(row_offs[order] - out_offs[:-1], out_lens) + np.arange(
+        total, dtype=np.int64
+    )
+    rep = leaf.rep[perm] if leaf.rep is not None else None
+    defs = leaf.defs[perm] if leaf.defs is not None else None
+    vmask = (leaf.defs == 0) if leaf.defs is not None else np.ones(leaf.n_entries, bool)
+    vslot = np.cumsum(vmask) - 1
+    sel = perm[vmask[perm]]
+    vals = leaf.values.take(vslot[sel])
+    return leaf_slice(leaf, rep, defs, vals, len(order))
+
+
+def empty_leaf(proto: ShreddedLeaf) -> ShreddedLeaf:
+    """A zero-row leaf slice with the prototype's static fields."""
+    return leaf_slice(
+        proto,
+        np.zeros(0, np.uint8) if proto.max_rep > 0 else None,
+        np.zeros(0, np.uint8) if proto.max_def > 0 else None,
+        empty_values(proto.leaf_type), 0)
+
+
+def empty_values(leaf_type: T.DataType) -> A.Array:
+    """A zero-length values array of ``leaf_type`` (non-nullable)."""
+    if isinstance(leaf_type, (T.Utf8, T.Binary)):
+        return A.VarBinaryArray(
+            leaf_type.with_nullable(False), np.ones(0, bool),
+            np.zeros(1, np.int64), np.zeros(0, np.uint8)
+        )
+    if isinstance(leaf_type, T.FixedSizeList):
+        return A.FixedSizeListArray(
+            leaf_type.with_nullable(False),
+            np.ones(0, bool),
+            np.zeros((0, leaf_type.size), dtype=np.dtype(leaf_type.child.dtype)),
+        )
+    return A.PrimitiveArray(
+        leaf_type.with_nullable(False), np.ones(0, bool),
+        np.zeros(0, np.dtype(leaf_type.dtype))
+    )
+
+
+def value_bytes(vals: A.Array) -> int:
+    """Payload bytes of a values array (the take paths' useful-bytes unit)."""
+    if isinstance(vals, A.VarBinaryArray):
+        return int(len(vals.data))
+    return int(vals.values.nbytes)

@@ -124,7 +124,10 @@ class WriteOptions:
         dict_encode: bool = False,  # parquet dictionary encoding
         arrow_compress: bool = False,
         packed_columns: Sequence[str] = (),  # struct columns to pack (4.3)
+        decode: str = "numpy",  # default chunk decoder: numpy | pallas
     ):
+        if decode not in ("numpy", "pallas"):
+            raise ValueError(f"decode must be 'numpy'|'pallas', got {decode!r}")
         self.encoding = encoding
         self.page_bytes = page_bytes
         self.fixed_codec = fixed_codec
@@ -132,6 +135,7 @@ class WriteOptions:
         self.dict_encode = dict_encode
         self.arrow_compress = arrow_compress
         self.packed_columns = tuple(packed_columns)
+        self.decode = decode
 
 
 def _proto(leaf: ShreddedLeaf) -> ShreddedLeaf:
@@ -217,7 +221,9 @@ def write_table(table: Dict[str, A.Array], opts: Optional[WriteOptions] = None) 
                 payload += ec.payload + b"\x00" * ((-len(ec.payload)) % 8)
             col["leaves"] = leaves_meta
         cols_meta.append(col)
-    footer = pack_meta({"columns": cols_meta, "options": {"encoding": opts.encoding}})
+    footer = pack_meta({"columns": cols_meta,
+                        "options": {"encoding": opts.encoding,
+                                    "decode": opts.decode}})
     return payload + footer + _struct.pack("<Q", len(footer)) + MAGIC
 
 
@@ -243,11 +249,21 @@ class FileReader:
     ``disk -> TieredStore``; a ready ``TieredStore`` instance is accepted
     only together with the ``Disk`` it wraps (bytes input always builds a
     fresh disk, so a pre-built store cannot match it).  Every
-    ``take``/``scan`` runs as one scheduler :class:`~repro.store.ReadBatch`.
+    ``take``/``scan`` runs as one scheduler :class:`~repro.store.ReadBatch`;
+    random access is the batched decode-once pipeline (all needed
+    chunks/index entries/spans submitted as phase-grouped ``read_many``
+    batches, each span decoded exactly once, rows fanned out to request
+    order by a single permutation).
+
+    ``decode`` selects the mini-block chunk decoder: ``"numpy"`` (host) or
+    ``"pallas"`` (batch decode through ``repro.kernels``; interpret mode on
+    CPU, Mosaic on TPU).  ``None`` defers to the writer's
+    ``WriteOptions(decode=...)`` recorded in the footer.
     """
 
     def __init__(self, file_bytes_or_disk, dict_cached: bool = False,
-                 store=None, queue_depth: int = 256, readahead="auto"):
+                 store=None, queue_depth: int = 256, readahead="auto",
+                 decode: Optional[str] = None):
         from ..store import IOScheduler, make_store
 
         if isinstance(file_bytes_or_disk, (bytes, bytearray)):
@@ -266,6 +282,11 @@ class FileReader:
         self.meta = unpack_meta(footer.tobytes())
         self.columns = {c["name"]: c for c in self.meta["columns"]}
         self.dict_cached = dict_cached
+        if decode is None:
+            decode = self.meta.get("options", {}).get("decode") or "numpy"
+        if decode not in ("numpy", "pallas"):
+            raise ValueError(f"decode must be 'numpy'|'pallas', got {decode!r}")
+        self.decode = decode
         self._readers: Dict[str, list] = {}
 
     # -- reader construction ------------------------------------------------
@@ -292,6 +313,9 @@ class FileReader:
                 if enc == "parquet":
                     out.append(cls(lm["meta"], lm["base"], proto,
                                    dict_cached=self.dict_cached))
+                elif enc == "miniblock":
+                    out.append(cls(lm["meta"], lm["base"], proto,
+                                   decode=self.decode))
                 else:
                     out.append(cls(lm["meta"], lm["base"], proto))
         self._readers[name] = out

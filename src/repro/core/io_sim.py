@@ -66,6 +66,37 @@ class Disk:
         # copy so callers can never alias (or mutate) the backing store
         return self._mem[offset : offset + size].copy()
 
+    def read_gather(self, offsets, sizes) -> Tuple[np.ndarray, np.ndarray]:
+        """Vectorized multi-extent read: one gather for N spans.
+
+        Returns ``(data, out_offsets)`` where span ``k``'s bytes are
+        ``data[out_offsets[k]:out_offsets[k + 1]]``.  Bounds are checked for
+        every span; the in-memory path is a single fancy-index copy (no
+        per-span Python loop), which is what makes the batched ``take``
+        pipeline's chunk/index/span fetches cheap.
+        """
+        offsets = np.asarray(offsets, dtype=np.int64)
+        sizes = np.asarray(sizes, dtype=np.int64)
+        out_offs = np.zeros(len(sizes) + 1, dtype=np.int64)
+        if len(sizes) == 0:
+            return np.zeros(0, np.uint8), out_offs
+        if (sizes < 0).any():
+            raise ValueError("negative read size in gather")
+        if int(offsets.min()) < 0 or int((offsets + sizes).max()) > self._size:
+            raise ValueError(
+                f"gather read out of bounds for {self._size}-byte disk"
+            )
+        np.cumsum(sizes, out=out_offs[1:])
+        if self._f is not None:  # pragma: no cover - file-backed fallback
+            parts = [self.read(int(o), int(s)) for o, s in zip(offsets, sizes)]
+            data = np.concatenate(parts) if parts else np.zeros(0, np.uint8)
+            return data, out_offs
+        total = int(out_offs[-1])
+        idx = np.repeat(offsets - out_offs[:-1], sizes) + np.arange(
+            total, dtype=np.int64
+        )
+        return self._mem[idx], out_offs
+
 
 @dataclasses.dataclass
 class IOStats:

@@ -107,13 +107,24 @@ class PackedStructReader:
         return A.StructArray(typ, validity, tuple(children))
 
     def take(self, rows: np.ndarray, io) -> A.StructArray:
+        """Batched random access: unique rows are fetched in one phase-0
+        ``read_many`` dispatch, decoded in a single pass, and gathered back
+        to request order (duplicates never re-read)."""
+        rows = np.asarray(rows, dtype=np.int64)
         stride = self.meta["stride"]
-        parts = []
-        for r in np.asarray(rows, dtype=np.int64):
-            raw = io.read(self.base + int(r) * stride, stride, phase=0)
-            parts.append(self._decode_rows(raw, 1))
-            io.note_useful(stride)
-        return A.concat(parts)
+        if len(rows) == 0:
+            return self._decode_rows(np.zeros(0, np.uint8), 0)
+        urows, inv = np.unique(rows, return_inverse=True)
+        if urows[0] < 0 or urows[-1] >= self.meta["n_rows"]:
+            raise IndexError(
+                f"take rows out of bounds for {self.meta['n_rows']}-row column"
+            )
+        data, _ = io.read_many(
+            self.base + urows * stride,
+            np.full(len(urows), stride, dtype=np.int64), phase=0)
+        # useful bytes over *unique* rows (duplicates are never re-read)
+        io.note_useful(stride * len(urows))
+        return self._decode_rows(data, len(urows)).take(inv)
 
     def scan(self, io, fields=None, io_chunk: int = 8 << 20) -> A.StructArray:
         n = self.meta["n_rows"]

@@ -242,6 +242,26 @@ class ReadBatch:
         self.ops.append((offset, size, phase))
         return self.scheduler.store.disk.read(offset, size)
 
+    def read_many(self, offsets, sizes, phase: int = 0):
+        """Submit one phase-grouped batch of spans in a single dispatch.
+
+        Records one logical op per span (accounting identical to N
+        :meth:`read` calls) but serves all bytes with one vectorized gather.
+        Returns ``(data, out_offsets)``: span ``k`` is
+        ``data[out_offsets[k]:out_offsets[k + 1]]``.  This is the batched
+        ``take`` pipeline's entry point — cross-row coalescing happens once
+        per phase at batch close instead of N times.
+        """
+        if self._closed:
+            raise RuntimeError("read on a closed ReadBatch")
+        offsets = np.asarray(offsets, dtype=np.int64)
+        sizes = np.asarray(sizes, dtype=np.int64)
+        phase = int(phase)
+        self.ops.extend(
+            (o, s, phase) for o, s in zip(offsets.tolist(), sizes.tolist())
+        )
+        return self.scheduler.store.disk.read_gather(offsets, sizes)
+
     def note_useful(self, nbytes: int) -> None:
         self._useful += int(nbytes)
 
