@@ -19,7 +19,9 @@ store's per-tier accounting (``FileReader.modelled_time``); counted IOPS
 stay store-independent, and the measured (CPU) column includes the
 simulator's block-classification overhead.  The ``store`` benchmark
 reproduces the headline cold-S3 / NVMe-warm / flat-NVMe comparison
-regardless of the flag.
+regardless of the flag; the ``dataset`` benchmark compares one shared NVMe
+budget against per-file split stores over a fragmented dataset
+(``BENCH_dataset.json``).
 """
 
 from __future__ import annotations
@@ -412,6 +414,117 @@ def take_decode():
     _emit("take_decode/written", 0.0, "path=BENCH_take.json")
 
 
+def dataset_take():
+    """The multi-file headline: an 8-fragment dataset served take-heavy with
+    a *skewed* (hot-fragment) row mix, under one shared NVMe budget vs the
+    same budget statically split into per-file stores.  The shared store
+    arbitrates the whole budget toward the hot fragments and coalesces
+    cross-file spans in one dispatch per phase, so it must win on rows/s and
+    on second-pass NVMe hit rate.  Results go to BENCH_dataset.json."""
+    from repro.dataset import DatasetReader, write_fragments
+    from repro.store import TieredStore
+
+    n_frag = 4 if SMOKE else 8
+    per_frag = 1_000 if SMOKE else 6_000
+    take_n = 1_200 if SMOKE else 10_000
+    n_hot = 2          # fragments receiving the bulk of the traffic
+    hot_frac = 0.85
+    width = 512        # float32 lanes -> 2 KiB embedding rows (~2 per block)
+    n = n_frag * per_frag
+    rng = np.random.default_rng(0)
+    arr = A.FixedSizeListArray(
+        T.FixedSizeList(T.Primitive("float32", nullable=False), width),
+        np.ones(n, bool), rng.standard_normal((n, width)).astype(np.float32))
+    files = write_fragments({"c": arr}, n_frag, WriteOptions("lance-fullzip"))
+    payload = sum(len(f) for f in files)
+    # one NVMe budget, sized to hold the hot fragments but not the dataset
+    budget = int(1.25 * n_hot * payload / n_frag)
+    row_starts = np.arange(n_frag, dtype=np.int64) * per_frag
+
+    def skewed_rows():
+        hot = rng.integers(0, n_hot * per_frag, int(take_n * hot_frac))
+        cold = rng.integers(0, n, take_n - len(hot))
+        return np.concatenate([hot, cold])
+
+    # one row draw per pass, replayed for BOTH configurations, so the
+    # shared-vs-split comparison is over identical requests
+    pass_rows = [skewed_rows(), skewed_rows()]
+
+    def one_pass(take_fn, readers, rows):
+        for r in readers:
+            r.reset_io()
+        t0 = time.perf_counter()
+        take_fn(rows)
+        dt = time.perf_counter() - t0
+        t_model = sum(r.modelled_time() for r in readers)
+        tiers = [s for r in readers for s in r.tier_stats()]
+        nvme = [s for s in tiers if s.name == "nvme_970evo"]
+        s3 = [s for s in tiers if s.name == "s3"]
+        hits, misses = sum(s.hits for s in nvme), sum(s.misses for s in nvme)
+        return {
+            "rows_per_s": round(take_n / max(dt, t_model)),
+            "cpu_s": round(dt, 6), "model_io_s": round(t_model, 6),
+            "nvme_hit_rate": round(hits / max(hits + misses, 1), 4),
+            "s3_iops": sum(s.n_iops for s in s3),
+            "nvme_iops": sum(s.n_iops for s in nvme),
+        }
+
+    # shared: the whole dataset behind one cache + scheduler
+    shared = DatasetReader(
+        files, store=lambda d: TieredStore.cached(d, cache_bytes=budget))
+    shared_res = {f"pass{i + 1}": one_pass(
+        lambda rows: shared.take("c", rows), [shared], pass_rows[i])
+        for i in range(2)}
+
+    # per-file: the seed world — N disjoint stores, budget split N ways
+    per_file = [
+        FileReader(fb, store=lambda d: TieredStore.cached(
+            d, cache_bytes=max(budget // n_frag, 4096)))
+        for fb in files
+    ]
+
+    def per_file_take(rows):
+        fi = np.searchsorted(row_starts, rows, side="right") - 1
+        for f in np.unique(fi):
+            per_file[f].take("c", rows[fi == f] - row_starts[f])
+
+    per_file_res = {f"pass{i + 1}": one_pass(per_file_take, per_file,
+                                             pass_rows[i])
+                    for i in range(2)}
+
+    results = {
+        "meta": {"n_fragments": n_frag, "rows_per_fragment": per_frag,
+                 "take_n": take_n, "hot_fragments": n_hot,
+                 "hot_fraction": hot_frac, "row_bytes": 4 * width,
+                 "payload_bytes": payload, "nvme_budget_bytes": budget,
+                 "smoke": SMOKE},
+        "shared_store": shared_res,
+        "per_file_store": per_file_res,
+        "headline": {
+            "rows_s_speedup_pass2": round(
+                shared_res["pass2"]["rows_per_s"]
+                / max(per_file_res["pass2"]["rows_per_s"], 1), 2),
+            "s3_iops_saved_pass2": per_file_res["pass2"]["s3_iops"]
+            - shared_res["pass2"]["s3_iops"],
+        },
+    }
+    with open("BENCH_dataset.json", "w") as f:
+        json.dump(results, f, indent=1, sort_keys=True)
+    for kind, res in [("shared", shared_res), ("per_file", per_file_res)]:
+        for p, cell in res.items():
+            _emit(f"dataset/{kind}/{p}", cell["cpu_s"] * 1e6,
+                  f"rows_per_s={cell['rows_per_s']};"
+                  f"hit_rate={cell['nvme_hit_rate']};s3_iops={cell['s3_iops']}")
+    _emit("dataset/headline", 0.0,
+          f"speedup_pass2={results['headline']['rows_s_speedup_pass2']}x;"
+          f"s3_iops_saved={results['headline']['s3_iops_saved_pass2']};"
+          "path=BENCH_dataset.json")
+    assert shared_res["pass2"]["rows_per_s"] >= per_file_res["pass2"]["rows_per_s"], \
+        "shared store must serve at least per-file rows/s"
+    assert shared_res["pass2"]["nvme_hit_rate"] > per_file_res["pass2"]["nvme_hit_rate"], \
+        "shared store must warm better than split per-file budgets"
+
+
 def kernel_bench():
     """Device decode paths: ref-oracle throughput on CPU + kernel validation
     (interpret mode executes the kernel body; wall-time is not TPU time)."""
@@ -471,8 +584,8 @@ def loader_bench():
 ALL = [fig1_device_model, fig10_parquet_random_access,
        fig11_encodings_random_access, fig12_fullzip_vs_miniblock,
        fig13_compression, fig14_16_full_scan, fig17_scan_decode_cost,
-       fig18_struct_packing, store_tiering, take_decode, kernel_bench,
-       loader_bench]
+       fig18_struct_packing, store_tiering, take_decode, dataset_take,
+       kernel_bench, loader_bench]
 
 
 def _parse_args(argv):

@@ -32,6 +32,7 @@ __all__ = [
     "leaf_slice",
     "avg_value_bytes",
     "reorder_leaf_rows",
+    "concat_leaves",
     "empty_leaf",
     "empty_values",
     "value_bytes",
@@ -147,6 +148,25 @@ def reorder_leaf_rows(leaf: ShreddedLeaf, order: np.ndarray) -> ShreddedLeaf:
     sel = perm[vmask[perm]]
     vals = leaf.values.take(vslot[sel])
     return leaf_slice(leaf, rep, defs, vals, len(order))
+
+
+def concat_leaves(leaves) -> ShreddedLeaf:
+    """Concatenate leaf slices of one schema leaf, row-wise.
+
+    The dataset layer takes each fragment's rows independently and stitches
+    the per-fragment results back together before the final request-order
+    permutation (:func:`reorder_leaf_rows`); rep/def streams and sparse
+    values concatenate directly because every slice carries complete rows.
+    """
+    if len(leaves) == 1:
+        return leaves[0]
+    l0 = leaves[0]
+    rep = (np.concatenate([l.rep for l in leaves])
+           if l0.rep is not None else None)
+    defs = (np.concatenate([l.defs for l in leaves])
+            if l0.defs is not None else None)
+    vals = A.concat([l.values for l in leaves])
+    return leaf_slice(l0, rep, defs, vals, sum(l.n_rows for l in leaves))
 
 
 def empty_leaf(proto: ShreddedLeaf) -> ShreddedLeaf:

@@ -37,7 +37,24 @@ from .shred import ShreddedLeaf, leaf_paths, shred, unshred
 
 MAGIC = b"LNC1"
 
-__all__ = ["WriteOptions", "write_table", "FileReader", "type_to_dict", "type_from_dict"]
+__all__ = ["WriteOptions", "write_table", "FileReader", "read_footer",
+           "type_to_dict", "type_from_dict"]
+
+
+def read_footer(read, size: int):
+    """Parse a Lance footer through ``read(offset, size) -> bytes-like``.
+
+    The single source of the trailer format (``[footer][len u64][magic]``),
+    shared by :class:`FileReader` (reading a Disk) and the dataset manifest
+    (peeking raw fragment bytes).  Returns ``(meta, footer_len)``.
+    """
+    if size < 12:
+        raise ValueError("not a Lance file (too short)")
+    tail = bytes(read(size - 12, 12))
+    if tail[-4:] != MAGIC:
+        raise ValueError("not a Lance file (bad magic)")
+    (flen,) = _struct.unpack("<Q", tail[:8])
+    return unpack_meta(bytes(read(size - 12 - flen, flen))), flen
 
 
 # ---------------------------------------------------------------------------
@@ -259,11 +276,18 @@ class FileReader:
     ``"pallas"`` (batch decode through ``repro.kernels``; interpret mode on
     CPU, Mosaic on TPU).  ``None`` defers to the writer's
     ``WriteOptions(decode=...)`` recorded in the footer.
+
+    ``scheduler``/``base`` plug this file into a *shared* IO path (the
+    multi-file dataset layer, ``repro.dataset``): instead of building its
+    own store the reader enqueues every read — rebased by ``base`` into the
+    scheduler's global address space — onto the injected
+    :class:`~repro.store.IOScheduler`, so many files coalesce in one
+    dispatch and share one cache budget.
     """
 
     def __init__(self, file_bytes_or_disk, dict_cached: bool = False,
                  store=None, queue_depth: int = 256, readahead="auto",
-                 decode: Optional[str] = None):
+                 decode: Optional[str] = None, scheduler=None, base: int = 0):
         from ..store import IOScheduler, make_store
 
         if isinstance(file_bytes_or_disk, (bytes, bytearray)):
@@ -271,15 +295,27 @@ class FileReader:
         else:
             disk = file_bytes_or_disk
         self.disk = disk
-        self.store = make_store(store, disk)
-        self.scheduler = IOScheduler(self.store, queue_depth=queue_depth,
-                                     readahead=readahead)
-        raw_tail = disk.read(len(disk) - 12, 12)
-        assert raw_tail[-4:].tobytes() == MAGIC, "bad magic"
-        (flen,) = _struct.unpack("<Q", raw_tail[:8].tobytes())
-        self.footer_bytes = flen
-        footer = disk.read(len(disk) - 12 - flen, flen)
-        self.meta = unpack_meta(footer.tobytes())
+        self.base = int(base)
+        if scheduler is not None:
+            if store is not None:
+                raise ValueError("pass store or scheduler, not both")
+            if queue_depth != 256 or readahead != "auto":
+                raise ValueError(
+                    "queue_depth/readahead are fixed by the injected "
+                    "scheduler")
+            if self.base < 0 or self.base + len(disk) > len(scheduler.store.disk):
+                raise ValueError(
+                    "file does not fit the shared store at base "
+                    f"{self.base}")
+            self.scheduler = scheduler
+            self.store = scheduler.store
+        else:
+            if self.base:
+                raise ValueError("base requires an injected scheduler")
+            self.store = make_store(store, disk)
+            self.scheduler = IOScheduler(self.store, queue_depth=queue_depth,
+                                         readahead=readahead)
+        self.meta, self.footer_bytes = read_footer(disk.read, len(disk))
         self.columns = {c["name"]: c for c in self.meta["columns"]}
         self.dict_cached = dict_cached
         if decode is None:
@@ -323,32 +359,52 @@ class FileReader:
 
     # -- public API -----------------------------------------------------------
     def take(self, name: str, rows) -> A.Array:
+        col = self.columns[name]
+        with self.scheduler.batch(f"take:{name}") as io:
+            res = self.take_leaves(name, rows, io)
+        if col["kind"] in ("arrow", "packed"):
+            return res
+        return unshred(res, type_from_dict(col["type"]))
+
+    def take_leaves(self, name: str, rows, io):
+        """One take through an externally-owned batch handle.
+
+        Returns the final :class:`~repro.core.arrays.Array` for
+        arrow/packed columns, or the list of per-leaf ``ShreddedLeaf``
+        slices (request order, duplicates materialized) for shredded ones —
+        the dataset layer concatenates leaves across fragments before
+        unshredding once.  Reads are rebased by this file's ``base`` so a
+        shared batch prices them in the global address space.
+        """
         rows = np.asarray(rows, dtype=np.int64)
         col = self.columns[name]
-        typ = type_from_dict(col["type"])
         readers = self._leaf_readers(name)
-        with self.scheduler.batch(f"take:{name}") as io:
-            if col["kind"] in ("arrow", "packed"):
-                return readers[0].take(rows, io)
-            leaves = [r.take(rows, io) for r in readers]
-        return unshred(leaves, typ)
+        io = io.at(self.base)
+        if col["kind"] in ("arrow", "packed"):
+            return readers[0].take(rows, io)
+        return [r.take(rows, io) for r in readers]
 
     def scan(self, name: str, io_chunk: int = 8 << 20) -> A.Array:
+        with self.scheduler.batch(f"scan:{name}", prefetch=True) as io:
+            return self.scan_into(name, io, io_chunk=io_chunk)
+
+    def scan_into(self, name: str, io, io_chunk: int = 8 << 20) -> A.Array:
+        """One full-column scan through an externally-owned batch handle."""
         col = self.columns[name]
         typ = type_from_dict(col["type"])
         readers = self._leaf_readers(name)
-        with self.scheduler.batch(f"scan:{name}", prefetch=True) as io:
-            if col["kind"] == "arrow":
-                return readers[0].scan(io)
-            if col["kind"] == "packed":
-                return readers[0].scan(io, io_chunk=io_chunk)
-            leaves = [r.scan(io, io_chunk=io_chunk) for r in readers]
+        io = io.at(self.base)
+        if col["kind"] == "arrow":
+            return readers[0].scan(io)
+        if col["kind"] == "packed":
+            return readers[0].scan(io, io_chunk=io_chunk)
+        leaves = [r.scan(io, io_chunk=io_chunk) for r in readers]
         return unshred(leaves, typ)
 
     def scan_packed_field(self, name: str, fields) -> A.Array:
         readers = self._leaf_readers(name)
         with self.scheduler.batch(f"scan:{name}", prefetch=True) as io:
-            return readers[0].scan(io, fields=fields)
+            return readers[0].scan(io.at(self.base), fields=fields)
 
     # -- accounting -------------------------------------------------------------
     def search_cache_bytes(self, name: Optional[str] = None) -> int:

@@ -22,8 +22,8 @@ from typing import Dict, List, Optional, Sequence, Tuple
 import numpy as np
 
 __all__ = [
-    "Disk", "IOTracker", "IOStats", "DeviceModel", "NVME", "S3", "HBM", "DRAM",
-    "model_time", "merge_phase_extents", "trace_stats",
+    "Disk", "DiskView", "IOTracker", "IOStats", "DeviceModel", "NVME", "S3",
+    "HBM", "DRAM", "model_time", "merge_phase_extents", "trace_stats",
 ]
 
 
@@ -96,6 +96,54 @@ class Disk:
             total, dtype=np.int64
         )
         return self._mem[idx], out_offs
+
+
+class DiskView:
+    """A length-bounded window into another :class:`Disk`.
+
+    A multi-fragment dataset concatenates its files into one global address
+    space (``repro.dataset``); each per-file reader parses its footer in
+    file-local coordinates through a view while every scheduled read is
+    priced at ``base + offset`` in the shared store — so cache block ids and
+    sector alignment are consistent across files.
+    """
+
+    def __init__(self, disk: "Disk", base: int, size: int):
+        base, size = int(base), int(size)
+        if base < 0 or size < 0 or base + size > len(disk):
+            raise ValueError(
+                f"view [{base}, {base + size}) out of bounds for "
+                f"{len(disk)}-byte disk"
+            )
+        self.disk = disk
+        self.base = base
+        self._size = size
+
+    def __len__(self) -> int:
+        return self._size
+
+    def read(self, offset: int, size: int) -> np.ndarray:
+        offset, size = int(offset), int(size)
+        if size < 0:
+            raise ValueError(f"negative read size {size}")
+        if offset < 0 or offset + size > self._size:
+            raise ValueError(
+                f"read [{offset}, {offset + size}) out of bounds for "
+                f"{self._size}-byte view"
+            )
+        return self.disk.read(self.base + offset, size)
+
+    def read_gather(self, offsets, sizes) -> Tuple[np.ndarray, np.ndarray]:
+        offsets = np.asarray(offsets, dtype=np.int64)
+        sizes = np.asarray(sizes, dtype=np.int64)
+        if len(sizes) and (
+            (sizes < 0).any() or int(offsets.min()) < 0
+            or int((offsets + sizes).max()) > self._size
+        ):
+            raise ValueError(
+                f"gather read out of bounds for {self._size}-byte view"
+            )
+        return self.disk.read_gather(offsets + self.base, sizes)
 
 
 @dataclasses.dataclass

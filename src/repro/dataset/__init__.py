@@ -1,0 +1,13 @@
+# Multi-file dataset layer: a fragment manifest with global row ids and a
+# global block-address space, read through ONE shared BlockCache +
+# IOScheduler so take-heavy serving over many Lance files sees a single
+# NVMe budget, cross-file per-phase coalescing, and workload-driven cache
+# admission.
+
+from .manifest import (  # noqa: F401
+    Fragment,
+    Manifest,
+    build_dataset_disk,
+    write_fragments,
+)
+from .reader import DatasetReader  # noqa: F401

@@ -75,23 +75,37 @@ class BatchedEngine:
 
 
 class Retriever:
-    """Random-access retrieval over a Lance file: the search-path consumer
-    (§1: 'search workloads fetch small subsets not aligned with the
-    clustered index').
+    """Random-access retrieval over a Lance file *or dataset*: the
+    search-path consumer (§1: 'search workloads fetch small subsets not
+    aligned with the clustered index').
 
-    ``store`` selects the tier stack (see :func:`repro.store.make_store`):
-    the serving deployment shape is ``store="tiered"`` — an NVMe block cache
-    over S3 that turns the hot working set into NVMe-priced reads while cold
-    rows pay the object-store round trip.
+    ``source`` is one Lance file (bytes), a list of fragment files (served
+    through :class:`repro.dataset.DatasetReader` — one shared NVMe budget
+    and cross-file coalescing over the whole dataset), or a ready
+    ``FileReader``/``DatasetReader``.  ``store`` selects the tier stack
+    (see :func:`repro.store.make_store`): the serving deployment shape is
+    ``store="tiered"`` — an NVMe block cache over S3 that turns the hot
+    working set into NVMe-priced reads while cold rows pay the object-store
+    round trip ("tiered-auto" additionally adapts cache admission to the
+    observed scan/take mix).
     """
 
-    def __init__(self, file_bytes: bytes, column: str = "embedding",
-                 store=None):
-        self.reader = FileReader(file_bytes, store=store)
+    def __init__(self, source, column: str = "embedding", store=None):
+        if isinstance(source, (list, tuple)):
+            from ..dataset import DatasetReader
+
+            self.reader = DatasetReader(list(source), store=store)
+        elif isinstance(source, (bytes, bytearray)):
+            self.reader = FileReader(source, store=store)
+        else:
+            if store is not None:
+                raise ValueError("store is fixed by a ready reader")
+            self.reader = source
         self.column = column
 
     def fetch(self, row_ids: np.ndarray):
-        """take() — at most 2 IOPS/row via full-zip (§4.1.4)."""
+        """take() — at most 2 IOPS/row via full-zip (§4.1.4).  Row ids are
+        global over the dataset when serving from fragments."""
         self.reader.reset_io()
         out = self.reader.take(self.column, np.asarray(row_ids, np.int64))
         return out, self.reader.io_stats()

@@ -14,3 +14,4 @@ from .scheduler import (  # noqa: F401
     make_store,
 )
 from .stats import TierStats  # noqa: F401
+from .workload import WorkloadStats  # noqa: F401

@@ -18,6 +18,11 @@ Admission policies:
 * ``second_touch`` — admit a block only on its second miss within the ghost
   window (a bounded FIFO of recently-seen block ids, 8x the cache's slot
   count).  Protects the cache from single-pass scan flooding.
+* ``auto`` — start as ``always`` and let an observer of the workload (the
+  scheduler's :class:`~repro.store.WorkloadStats`) flip the *active* policy
+  between ``always`` (take-heavy mixes: admit the hot rows immediately) and
+  ``second_touch`` (scan-heavy mixes: keep single-pass streams from
+  flooding the cache) via :meth:`BlockCache.set_active_admission`.
 """
 
 from __future__ import annotations
@@ -42,12 +47,14 @@ class BlockCache:
             raise ValueError("cache smaller than one block")
         if policy not in ("clock", "lru"):
             raise ValueError(f"unknown eviction policy {policy!r}")
-        if admission not in ("always", "second_touch"):
+        if admission not in ("always", "second_touch", "auto"):
             raise ValueError(f"unknown admission policy {admission!r}")
         self.block_bytes = int(block_bytes)
         self.capacity_blocks = int(capacity_bytes) // self.block_bytes
         self.policy = policy
-        self.admission = admission
+        self.admission = admission  # configured policy ("auto" stays "auto")
+        self._active = "always" if admission == "auto" else admission
+        self.admission_flips = 0
         self.hits = 0
         self.misses = 0
         self.evictions = 0
@@ -90,11 +97,27 @@ class BlockCache:
         self.misses += 1
         return False
 
+    @property
+    def active_admission(self) -> str:
+        """The policy actually applied to admits (resolves ``auto``)."""
+        return self._active
+
+    def set_active_admission(self, policy: str) -> None:
+        """Flip the active policy of an ``auto`` cache.  No-op unless the
+        cache was configured ``admission="auto"`` — explicit policies are
+        pinned by construction."""
+        if policy not in ("always", "second_touch"):
+            raise ValueError(f"unknown admission policy {policy!r}")
+        if self.admission != "auto" or policy == self._active:
+            return
+        self._active = policy
+        self.admission_flips += 1
+
     def admit(self, block_id: int) -> bool:
         """Maybe-insert a block after a miss; returns True if now resident."""
         if block_id in self:
             return True
-        if self.admission == "second_touch":
+        if self._active == "second_touch":
             if block_id not in self._ghost:
                 self._ghost[block_id] = None
                 while len(self._ghost) > self._ghost_cap:

@@ -42,6 +42,7 @@ from ..core.io_sim import (
 from .cache import BlockCache
 from .prefetch import SequentialReadahead
 from .stats import TierStats
+from .workload import WorkloadStats
 
 __all__ = ["CacheTier", "TieredStore", "ReadBatch", "IOScheduler", "make_store"]
 
@@ -101,10 +102,18 @@ class TieredStore:
         sector: int = DEFAULT_SECTOR,
         policy: str = "clock",
         admission: str = "always",
+        cache: Optional[BlockCache] = None,
     ) -> "TieredStore":
-        """The paper's deployment shape: an NVMe block cache over S3."""
-        cache = BlockCache(cache_bytes, block_bytes=sector, policy=policy,
-                           admission=admission)
+        """The paper's deployment shape: an NVMe block cache over S3.
+
+        Pass an existing ``cache`` to share one block cache (one NVMe
+        budget) across several stores — valid only when the stores price
+        reads over the same address space (the same :class:`Disk`, or a
+        dataset's concatenated global disk), since block ids are plain
+        sector numbers."""
+        if cache is None:
+            cache = BlockCache(cache_bytes, block_bytes=sector, policy=policy,
+                               admission=admission)
         return cls(disk, backing=backing,
                    levels=(CacheTier(cache_device, cache),), sector=sector)
 
@@ -265,6 +274,16 @@ class ReadBatch:
     def note_useful(self, nbytes: int) -> None:
         self._useful += int(nbytes)
 
+    def at(self, base: int):
+        """A view of this batch translated by ``base`` bytes.
+
+        Encoding readers always issue file-local offsets; when several files
+        share one scheduler (``repro.dataset``) each file's reads are
+        rebased into the dataset's global address space through this view,
+        so spans from different files coalesce in the same per-phase pass
+        and hit the same cache block ids."""
+        return self if not base else _OffsetBatch(self, int(base))
+
     def close(self) -> None:
         if not self._closed:
             self._closed = True
@@ -275,6 +294,29 @@ class ReadBatch:
 
     def __exit__(self, *exc) -> None:
         self.close()
+
+
+class _OffsetBatch:
+    """Thin rebasing proxy over a :class:`ReadBatch` (see its ``at``)."""
+
+    __slots__ = ("_batch", "base")
+
+    def __init__(self, batch, base: int):
+        self._batch = batch
+        self.base = base
+
+    def read(self, offset: int, size: int, phase: int = 0) -> np.ndarray:
+        return self._batch.read(self.base + int(offset), size, phase)
+
+    def read_many(self, offsets, sizes, phase: int = 0):
+        offsets = np.asarray(offsets, dtype=np.int64) + self.base
+        return self._batch.read_many(offsets, sizes, phase)
+
+    def note_useful(self, nbytes: int) -> None:
+        self._batch.note_useful(nbytes)
+
+    def at(self, base: int):
+        return self._batch.at(self.base + int(base))
 
 
 class IOScheduler:
@@ -292,6 +334,7 @@ class IOScheduler:
         if readahead == "auto":
             readahead = SequentialReadahead() if store.levels else None
         self.readahead = readahead or None
+        self.workload = WorkloadStats()
         self.ops: List[Tuple[int, int, int]] = []
         self._useful = 0
         self.n_batches = 0
@@ -303,6 +346,15 @@ class IOScheduler:
         self.ops.extend(batch.ops)
         self._useful += batch._useful
         self.n_batches += 1
+        # Admission auto-select: fold this batch into the scan/take mix and
+        # re-point any auto cache level *before* the batch dispatches, so a
+        # scan arriving at a take-warmed cache is already policed.
+        self.workload.note_batch(batch.label, batch.prefetch, len(batch.ops),
+                                 sum(sz for _, sz, _ in batch.ops))
+        policy = self.workload.preferred_admission()
+        for lvl in self.store.levels:
+            if lvl.cache.admission == "auto":
+                lvl.cache.set_active_admission(policy)
         # Readahead watches the *raw request stream in arrival order* — what
         # a streaming scheduler sees as the reader issues its chunks — and
         # its fills land in the cache ahead of the demand drain, so the
@@ -343,20 +395,27 @@ class IOScheduler:
         self._useful = 0
         self.n_batches = 0
         self.store.reset_stats()
+        self.workload.reset()
         if self.readahead is not None:
             self.readahead.reset()
 
 
 def make_store(spec, disk: Disk) -> TieredStore:
     """Resolve a store spec: None/'flat' (NVMe, seed behaviour), 'flat-s3'
-    (cold object store), 'tiered' (NVMe cache over S3), 'hot' (RAM over NVMe
-    over S3), a callable ``disk -> TieredStore``, or a ready instance."""
+    (cold object store), 'tiered' (NVMe cache over S3), 'tiered-auto' (same
+    with workload-driven admission), 'hot' (RAM over NVMe over S3), a
+    callable ``disk -> TieredStore``, or a ready instance (which must have
+    been built over the same ``Disk`` so cache block ids stay meaningful —
+    sharing one store across readers of the same disk is how they share one
+    NVMe budget)."""
     if spec is None or spec == "flat":
         return TieredStore.flat(disk)
     if spec == "flat-s3":
         return TieredStore.flat(disk, device=S3)
     if spec == "tiered":
         return TieredStore.cached(disk)
+    if spec == "tiered-auto":
+        return TieredStore.cached(disk, admission="auto")
     if spec == "hot":
         return TieredStore.hot(disk)
     if isinstance(spec, TieredStore):

@@ -1,0 +1,272 @@
+"""Multi-file dataset layer: fragment manifest, global-row takes through one
+shared scheduler/cache, cross-file coalescing, and workload-driven admission.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import arrays as A, types as T
+from repro.core.file import FileReader, WriteOptions, write_table
+from repro.core.io_sim import Disk, DiskView
+from repro.dataset import DatasetReader, Manifest, write_fragments
+from repro.store import TieredStore
+
+
+def _table(n=2000, seed=0):
+    rng = np.random.default_rng(seed)
+    ints = A.PrimitiveArray.build(
+        rng.integers(0, 1 << 20, n).astype(np.int64),
+        validity=rng.random(n) > 0.05)
+    strs = A.from_pylist(
+        [None if i % 17 == 0 else f"v{i}" * (i % 5 + 1) for i in range(n)],
+        T.Utf8(True))
+    lists = A.from_pylist(
+        [None if i % 13 == 0 else list(range(i % 4)) for i in range(n)],
+        T.List(T.int64(), True))
+    return {"i": ints, "s": strs, "l": lists}
+
+
+def _messy_rows(n, seed=1):
+    """Unsorted, duplicated, spanning every fragment boundary."""
+    rng = np.random.default_rng(seed)
+    half = n // 2
+    return np.concatenate([
+        rng.integers(0, n, 300),
+        [0, n - 1, half - 1, half, half + 1, half, 0, n - 1],
+    ])
+
+
+# ---------------------------------------------------------------------------
+# correctness: dataset take/scan == single-file take/scan
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("enc", ["lance-miniblock", "lance-fullzip",
+                                 "parquet", "arrow"])
+def test_dataset_take_matches_single_file(enc):
+    table = _table()
+    n = 2000
+    files = write_fragments(table, 4, WriteOptions(enc))
+    ds = DatasetReader(files, store="tiered")
+    single = FileReader(write_table(table, WriteOptions(enc)))
+    rows = _messy_rows(n)
+    for col in table:
+        got = A.to_pylist(ds.take(col, rows))
+        want = A.to_pylist(single.take(col, rows))
+        assert got == want
+        assert A.to_pylist(ds.scan(col)) == A.to_pylist(table[col])
+
+
+def test_dataset_take_packed_struct():
+    rng = np.random.default_rng(0)
+    n = 1200
+    children = [(f"f{i}", A.PrimitiveArray.build(
+        rng.integers(0, 1 << 30, n).astype(np.int64), nullable=False))
+        for i in range(3)]
+    table = {"p": A.StructArray.build(children, nullable=False)}
+    opts = WriteOptions("lance", packed_columns=("p",))
+    files = write_fragments(table, 3, opts)
+    ds = DatasetReader(files)
+    single = FileReader(write_table(table, opts))
+    rows = _messy_rows(n)
+    assert A.to_pylist(ds.take("p", rows)) == \
+        A.to_pylist(single.take("p", rows))
+
+
+def test_dataset_take_empty_and_bounds():
+    files = write_fragments(_table(400), 2, WriteOptions("lance"))
+    ds = DatasetReader(files)
+    assert A.to_pylist(ds.take("i", np.array([], np.int64))) == []
+    with pytest.raises(IndexError):
+        ds.take("i", np.array([400]))
+    with pytest.raises(IndexError):
+        ds.take("i", np.array([-1]))
+
+
+# ---------------------------------------------------------------------------
+# one shared dispatch / cross-file coalescing
+# ---------------------------------------------------------------------------
+
+
+def test_dataset_take_is_one_dispatch_per_phase():
+    """A take spanning >=2 fragments must run as ONE scheduler batch (one
+    queue drain) with each dependency phase dispatched once — not one drain
+    per fragment as per-file stores would."""
+    arr = A.PrimitiveArray.build(np.arange(4000, dtype=np.int64),
+                                 nullable=False)
+    files = write_fragments({"c": arr}, 2, WriteOptions("lance-fullzip"))
+    ds = DatasetReader(files)
+    rows = np.array([1, 3999, 2001, 7, 1999, 2000])
+    got = ds.take("c", rows)
+    assert A.to_pylist(got) == rows.tolist()
+    assert ds.scheduler.n_batches == 1
+    backing = ds.store.backing_stats
+    assert len(backing.batch_phases) == 1  # one queue drain for both files
+    # fixed-stride full-zip: a single span phase holds both files' spans
+    assert list(backing.batch_phases[0]) == [0]
+
+
+def test_cross_file_coalescing_reduces_backing_iops():
+    """Two tiny fragments land in one global 4 KiB block: the shared store
+    reads it once; disjoint per-file stores pay the backing device twice."""
+    arr = A.PrimitiveArray.build(np.arange(200, dtype=np.int64),
+                                 nullable=False)
+    files = write_fragments({"c": arr}, 2, WriteOptions("lance-fullzip"))
+    assert sum(len(f) for f in files) <= 4096  # both files share block 0
+
+    ds = DatasetReader(files, store="tiered")
+    ds.take("c", np.array([99, 100, 5, 199]))
+    shared_s3 = ds.tier_stats()[-1].n_iops
+
+    per_file = [FileReader(fb, store="tiered") for fb in files]
+    per_file[0].take("c", np.array([99, 5]))
+    per_file[1].take("c", np.array([0, 99]))
+    split_s3 = sum(fr.tier_stats()[-1].n_iops for fr in per_file)
+
+    assert shared_s3 < split_s3
+    assert shared_s3 == 1
+
+
+def test_shared_cache_second_reader_hits_warm_blocks():
+    """Two FileReaders over one disk + one TieredStore: reader 2's take is
+    served by blocks reader 1 warmed (the shared-NVMe-budget contract)."""
+    arr = A.PrimitiveArray.build(np.arange(5000, dtype=np.int64),
+                                 nullable=False)
+    disk = Disk.from_bytes(write_table({"c": arr},
+                                       WriteOptions("lance-fullzip")))
+    store = TieredStore.cached(disk)
+    fr1 = FileReader(disk, store=store)
+    fr2 = FileReader(disk, store=store)
+    rows = np.arange(0, 5000, 11)
+    fr1.take("c", rows)
+    s3_after_warm = store.backing_stats.n_iops
+    assert s3_after_warm > 0
+    hits_before = store.levels[0].cache.hits
+    fr2.take("c", rows)
+    assert store.levels[0].cache.hits > hits_before
+    assert store.backing_stats.n_iops == s3_after_warm  # no new S3 traffic
+
+
+def test_dataset_second_pass_warm():
+    """Dataset-level warm pass: a repeat take over every fragment is served
+    entirely from the shared cache."""
+    table = _table(1600)
+    files = write_fragments(table, 4, WriteOptions("lance"))
+    ds = DatasetReader(files, store="tiered")
+    rows = _messy_rows(1600)
+    ds.take("i", rows)
+    t_cold = ds.modelled_time()
+    ds.reset_io()
+    ds.take("i", rows)
+    nvme, s3 = ds.tier_stats()
+    assert s3.n_iops == 0 and nvme.hit_rate == 1.0
+    assert ds.modelled_time() < t_cold
+
+
+def test_dataset_scan_readahead_crosses_fragments():
+    """A dataset scan is one prefetch-flagged batch: readahead sees the
+    global request stream and keeps prefetching across the file boundary
+    (the inter-file gap is a footer, far below max_gap)."""
+    table = {"s": A.from_pylist([f"value-{i:06d}" * 3 for i in range(8000)],
+                                T.Utf8(False))}
+    files = write_fragments(table, 2, WriteOptions("lance-miniblock"))
+    ds = DatasetReader(files, store="tiered")
+    got = ds.scan("s", io_chunk=16 * 1024)
+    assert A.to_pylist(got) == A.to_pylist(table["s"])
+    assert ds.scheduler.n_batches == 1
+    nvme, s3 = ds.tier_stats()
+    assert s3.prefetch_iops > 0 and nvme.hits > 0
+    # prefetch reached past fragment 0: the high-water mark of the single
+    # readahead stream is inside fragment 1's global extent
+    frag1 = ds.manifest.fragments[1]
+    assert ds.scheduler.readahead._ra_until > frag1.base
+
+
+# ---------------------------------------------------------------------------
+# manifest
+# ---------------------------------------------------------------------------
+
+
+def test_manifest_geometry_and_locate():
+    files = write_fragments(_table(1000), 4, WriteOptions("lance"))
+    m = Manifest.from_files(files)
+    assert m.n_fragments == 4 and m.n_rows == 1000
+    assert [f.n_rows for f in m.fragments] == [250] * 4
+    assert all(f.base % 8 == 0 for f in m.fragments)
+    assert m.column_names == ["i", "s", "l"]
+    fi, local = m.locate([0, 249, 250, 999, 500])
+    assert fi.tolist() == [0, 0, 1, 3, 2]
+    assert local.tolist() == [0, 249, 0, 249, 0]
+    with pytest.raises(IndexError):
+        m.locate([1000])
+
+
+def test_manifest_rejects_schema_mismatch():
+    a = write_table({"x": A.PrimitiveArray.build(
+        np.arange(10, dtype=np.int64), nullable=False)})
+    b = write_table({"y": A.PrimitiveArray.build(
+        np.arange(10, dtype=np.int64), nullable=False)})
+    with pytest.raises(ValueError):
+        Manifest.from_files([a, b])
+    with pytest.raises(ValueError):
+        Manifest.from_files([])
+    with pytest.raises(ValueError):
+        Manifest.from_files([b"not a lance file"])
+
+
+def test_write_fragments_validation():
+    table = _table(10)
+    with pytest.raises(ValueError):
+        write_fragments(table, 0)
+    with pytest.raises(ValueError):
+        write_fragments(table, 11)
+
+
+def test_disk_view_bounds():
+    disk = Disk(np.arange(64, dtype=np.uint8))
+    v = DiskView(disk, 16, 32)
+    assert len(v) == 32
+    assert v.read(0, 4).tolist() == [16, 17, 18, 19]
+    data, offs = v.read_gather([0, 30], [2, 2])
+    assert data.tolist() == [16, 17, 46, 47]
+    with pytest.raises(ValueError):
+        v.read(30, 4)
+    with pytest.raises(ValueError):
+        v.read_gather([30], [4])
+    with pytest.raises(ValueError):
+        DiskView(disk, 60, 8)
+
+
+def test_file_reader_injection_validation():
+    fb = write_table({"c": A.PrimitiveArray.build(
+        np.arange(10, dtype=np.int64), nullable=False)})
+    with pytest.raises(ValueError):
+        FileReader(fb, base=8)  # base without a shared scheduler
+    ds = DatasetReader([fb])
+    with pytest.raises(ValueError):
+        FileReader(fb, store="tiered", scheduler=ds.scheduler)
+    with pytest.raises(ValueError):  # does not fit the shared disk
+        FileReader(fb, scheduler=ds.scheduler, base=1 << 30)
+
+
+# ---------------------------------------------------------------------------
+# serving path
+# ---------------------------------------------------------------------------
+
+
+def test_retriever_over_dataset():
+    from repro.data import synth
+    from repro.serve.engine import Retriever
+
+    emb = synth.scenario("embeddings", 900)
+    files = write_fragments({"embedding": emb}, 3, WriteOptions("lance"))
+    r = Retriever(files, "embedding", store="tiered")
+    ids = np.array([5, 299, 300, 899, 450])  # crosses every fragment
+    out, st = r.fetch(ids)
+    assert len(out) == len(ids)
+    assert A.to_pylist(out) == [A.to_pylist(emb)[i] for i in ids]
+    assert st.n_iops == len(ids)  # full-zip fixed width: 1 IOP/row
+    cold = r.modelled_time()
+    r.fetch(ids)
+    assert r.modelled_time() < cold
+    assert r.tier_stats()[-1].n_iops == 0  # warm: no S3 traffic

@@ -12,6 +12,7 @@ from repro.store import (
     IOScheduler,
     SequentialReadahead,
     TieredStore,
+    WorkloadStats,
     make_store,
 )
 
@@ -85,6 +86,83 @@ def test_cache_rejects_bad_config():
         BlockCache(1 << 20, policy="marvellous")
     with pytest.raises(ValueError):
         BlockCache(1 << 20, admission="never")
+
+
+# ---------------------------------------------------------------------------
+# workload-driven admission ("auto")
+# ---------------------------------------------------------------------------
+
+
+def test_workload_stats_mix_and_preference():
+    ws = WorkloadStats()
+    assert ws.preferred_admission() == "always"  # cold-start default
+    ws.note_batch("scan:c", prefetch=True, n_ops=4, nbytes=1 << 20)
+    assert ws.preferred_admission() == "second_touch"
+    assert ws.n_scan_batches == 1 and ws.scan_bytes == 1 << 20
+    for _ in range(3):
+        ws.note_batch("take:c", prefetch=False, n_ops=100, nbytes=1 << 19)
+    assert ws.take_bytes > ws.scan_bytes
+    assert ws.preferred_admission() == "always"
+    assert 0.0 < ws.scan_fraction < 0.5
+    ws.reset()
+    assert ws.n_scan_batches == ws.n_take_batches == 0
+
+
+def test_admission_auto_flips_with_trace():
+    """admission="auto" must follow the observed mix: a scan-heavy trace
+    flips the active policy to second_touch, a take-heavy one back."""
+    disk = Disk(np.zeros(1 << 22, np.uint8))
+    store = TieredStore.cached(disk, admission="auto")
+    cache = store.levels[0].cache
+    sched = IOScheduler(store)
+    assert cache.admission == "auto" and cache.active_admission == "always"
+
+    # scan-heavy: one big streaming batch dominates the byte mix
+    with sched.batch("scan:c", prefetch=True) as io:
+        io.read(0, 1 << 20)
+    assert cache.active_admission == "second_touch"
+    assert cache.admission_flips == 1
+    # ...and the flip applied to that very batch: first-touch blocks were
+    # only ghosted, so the single-pass scan did not flood the cache
+    assert len(cache) == 0
+
+    # take-heavy: many small random batches overtake the scan bytes
+    for i in range(0, 3 << 20, 4096):
+        with sched.batch("take:c") as io:
+            io.read(i % (1 << 20), 4096)
+    assert cache.active_admission == "always"
+    assert cache.admission_flips == 2
+
+
+def test_admission_pinned_policies_do_not_flip():
+    c = BlockCache(1 << 20, admission="second_touch")
+    c.set_active_admission("always")
+    assert c.active_admission == "second_touch"  # pinned by construction
+    with pytest.raises(ValueError):
+        c.set_active_admission("auto")
+
+
+def test_make_store_tiered_auto_spec():
+    disk = Disk(np.zeros(1 << 16, np.uint8))
+    store = make_store("tiered-auto", disk)
+    assert store.levels[0].cache.admission == "auto"
+    assert store.levels[0].cache.active_admission == "always"
+
+
+def test_tiered_store_accepts_shared_cache():
+    """Satellite: several stores over one address space can share one
+    BlockCache instance (one NVMe budget, no re-plumbing)."""
+    disk = Disk(np.zeros(64 * 4096, np.uint8))
+    cache = BlockCache(16 * 4096)
+    s1 = TieredStore.cached(disk, cache=cache)
+    s2 = TieredStore.cached(disk, cache=cache)
+    assert s1.levels[0].cache is s2.levels[0].cache
+    s1.dispatch_extent(0, 4096, phase=0)       # s1 warms block 0
+    s2.dispatch_extent(0, 4096, phase=0)       # s2 hits it
+    assert cache.hits == 1 and cache.misses == 1
+    assert s2.backing_stats.n_iops == 0        # no second backing read
+    with pytest.raises(ValueError):            # sector mismatch is rejected
+        TieredStore.cached(disk, sector=8192, cache=cache)
 
 
 # ---------------------------------------------------------------------------
