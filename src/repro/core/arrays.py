@@ -30,7 +30,25 @@ __all__ = [
     "from_pylist",
     "to_pylist",
     "concat",
+    "ragged_indices",
 ]
+
+
+def ragged_indices(starts: np.ndarray, lengths: np.ndarray) -> np.ndarray:
+    """Flat source indices of ragged segments: ``[starts[k], starts[k] +
+    lengths[k])`` for every segment, concatenated.
+
+    The one repeat/arange idiom behind every vectorized ragged gather in the
+    repo (var-binary/list takes, zipped value-byte slicing, arrow span
+    extraction): ``out[cum[k] + i] = starts[k] + i``.
+    """
+    lengths = np.asarray(lengths, dtype=np.int64)
+    offs = np.zeros(len(lengths) + 1, dtype=np.int64)
+    np.cumsum(lengths, out=offs[1:])
+    total = int(offs[-1])
+    return np.repeat(np.asarray(starts, dtype=np.int64) - offs[:-1], lengths) + np.arange(
+        total, dtype=np.int64
+    )
 
 
 def _as_validity(validity, n: int) -> np.ndarray:
@@ -126,9 +144,9 @@ class VarBinaryArray(Array):
         lengths = (self.offsets[1:] - self.offsets[:-1])[idx]
         new_off = np.zeros(len(idx) + 1, dtype=np.int64)
         np.cumsum(lengths, out=new_off[1:])
-        out = np.zeros(int(new_off[-1]), dtype=np.uint8)
-        for j, i in enumerate(idx):
-            out[new_off[j] : new_off[j + 1]] = self.data[self.offsets[i] : self.offsets[i + 1]]
+        # one repeat/arange gather instead of a per-value copy loop
+        src = ragged_indices(self.offsets[:-1][idx], lengths)
+        out = self.data[src] if len(src) else np.zeros(0, dtype=np.uint8)
         return VarBinaryArray(self.type, self.validity[idx], new_off, out)
 
 
@@ -148,10 +166,7 @@ class ListArray(Array):
         lengths = (self.offsets[1:] - self.offsets[:-1])[idx]
         new_off = np.zeros(len(idx) + 1, dtype=np.int64)
         np.cumsum(lengths, out=new_off[1:])
-        child_idx = np.concatenate(
-            [np.arange(self.offsets[i], self.offsets[i + 1], dtype=np.int64) for i in idx]
-            or [np.zeros(0, dtype=np.int64)]
-        )
+        child_idx = ragged_indices(self.offsets[:-1][idx], lengths)
         return ListArray(self.type, self.validity[idx], new_off, self.child.take(child_idx))
 
 

@@ -272,10 +272,14 @@ class FileReader:
     batches, each span decoded exactly once, rows fanned out to request
     order by a single permutation).
 
-    ``decode`` selects the mini-block chunk decoder: ``"numpy"`` (host) or
-    ``"pallas"`` (batch decode through ``repro.kernels``; interpret mode on
-    CPU, Mosaic on TPU).  ``None`` defers to the writer's
-    ``WriteOptions(decode=...)`` recorded in the footer.
+    ``decode`` selects the device decode routes: ``"numpy"`` (host) or
+    ``"pallas"`` (``repro.kernels``; interpret mode on CPU, Mosaic on TPU).
+    Under ``"pallas"`` mini-block chunks batch-decode through the widened
+    ``miniblock_decode`` kernel (bit-packed and FoR-bytepacked ints,
+    multi-bit rep/def streams, fixed-size-list values) and fixed-stride
+    full-zip takes fan out through the ``fullzip_gather`` block-table DMA
+    gather.  ``None`` defers to the writer's ``WriteOptions(decode=...)``
+    recorded in the footer.
 
     ``scheduler``/``base`` plug this file into a *shared* IO path (the
     multi-file dataset layer, ``repro.dataset``): instead of building its
@@ -349,7 +353,7 @@ class FileReader:
                 if enc == "parquet":
                     out.append(cls(lm["meta"], lm["base"], proto,
                                    dict_cached=self.dict_cached))
-                elif enc == "miniblock":
+                elif enc in ("miniblock", "fullzip"):
                     out.append(cls(lm["meta"], lm["base"], proto,
                                    decode=self.decode))
                 else:

@@ -390,81 +390,124 @@ class MiniBlockReader(ColumnReader):
     # ------------------------------------------------------------------
     def _decode_chunks(self, chunk_ids, raws) -> List[tuple]:
         """Decode chunks ``chunk_ids`` (raw payloads in ``raws``) exactly
-        once each.  Under ``decode='pallas'``, bit-packed flat integer chunks
-        are batch-decoded by one ``pallas_call``; the rest fall back to the
-        numpy path per chunk."""
+        once each.  Under ``decode='pallas'``, integer chunks (bit-packed or
+        FoR byte-packed values; flat, nested or fixed-size-list; any
+        rep/def level width) are batch-decoded by one ``pallas_call``; the
+        rest fall back to the numpy path per chunk."""
         if self.decode == "pallas":
             routed = self._decode_chunks_pallas(chunk_ids, raws)
             if routed is not None:
                 return routed
         return [self._decode_chunk(c, raw) for c, raw in zip(chunk_ids, raws)]
 
+    _PALLAS_MAX_TILE_VALUES = 1 << 17  # VMEM cap on tile_entries * vpe
+
     def _pallas_eligible(self) -> bool:
-        """The kernel covers flat (non-repeated) integer primitives with a
-        <=1-bit definition stream and bit-packed values <=31 bits."""
+        """Column-level kernel coverage: integer primitives and fixed-size
+        lists of integers, with any (column-constant) rep/def level widths.
+        Per-chunk value codecs are checked in :meth:`_chunk_kernel_params`.
+        """
         lt = self.proto.leaf_type
-        return (
-            self.proto.max_rep == 0
-            and self.proto.max_def <= 1
-            and isinstance(lt, T.Primitive)
-            and np.dtype(lt.dtype).kind in "iu"
-        )
+        if isinstance(lt, T.Primitive):
+            vpe = 1
+            kind = np.dtype(lt.dtype).kind
+        elif isinstance(lt, T.FixedSizeList):
+            vpe = lt.size
+            kind = np.dtype(lt.child.dtype).kind
+        else:
+            return False
+        return kind in "iu" and MAX_CHUNK_VALUES * vpe <= self._PALLAS_MAX_TILE_VALUES
+
+    @staticmethod
+    def _chunk_kernel_params(bufmeta: Dict) -> Optional[tuple]:
+        """Per-chunk value-codec eligibility: ``(bits, ref)`` when the
+        kernel's int32 extract covers this chunk, else None.  ``bitpack`` is
+        a dense bit stream (ref 0); ``bytepack`` is byte-aligned FoR whose
+        reference must keep the int32 arithmetic exact."""
+        codec = bufmeta.get("codec")
+        if codec == "bitpack":
+            return (bufmeta["bits"], 0) if bufmeta["bits"] <= 31 else None
+        if codec == "bytepack":
+            ref = bufmeta.get("ref")
+            if ref is None:  # float payload stored as raw bytes
+                return None
+            bits = 8 * bufmeta["width"]
+            if bits > 31:
+                return None
+            if ref < -(1 << 31) or ref + (1 << bits) - 1 > (1 << 31) - 1:
+                return None
+            return (bits, ref)
+        return None
 
     def _decode_chunks_pallas(self, chunk_ids, raws) -> Optional[List[tuple]]:
         if not self._pallas_eligible():
             return None
         from ..kernels import ops  # lazy: keep numpy-only readers jax-free
 
-        nullable = self.proto.max_def > 0
+        lt = self.proto.leaf_type
+        fsl = isinstance(lt, T.FixedSizeList)
+        vpe = lt.size if fsl else 1
+        dt = np.dtype(lt.child.dtype if fsl else lt.dtype)
+        rep_bits = level_bits(self.proto.max_rep)
+        def_bits = level_bits(self.proto.max_def)
+        vbi = (1 if rep_bits else 0) + (1 if def_bits else 0)
         metas = [self.meta["chunks"][c] for c in chunk_ids]
-        vbi = 1 if nullable else 0  # values buffer index (no rep stream)
         # metadata-only eligibility check first: chunks are parsed at most
         # once, and an all-ineligible batch costs no parse work at all
-        ok = [
-            cm["bufmeta"][vbi].get("codec") == "bitpack"
-            and cm["bufmeta"][vbi]["bits"] <= 31
-            for cm in metas
-        ]
-        if not any(ok):
+        kp = [self._chunk_kernel_params(cm["bufmeta"][vbi]) for cm in metas]
+        if not any(p is not None for p in kp):
             return None
-        sel = [i for i, o in enumerate(ok) if o]
+        sel = [i for i, p in enumerate(kp) if p is not None]
         parsed = {i: _parse_chunk(raws[i]) for i in sel}
-        dw = MAX_CHUNK_VALUES // 32  # 1-bit def bitmap, word-padded
-        def_words = np.zeros((len(sel), dw if nullable else 1), dtype=np.uint32)
-        vw = 1
-        val_word_list = []
+        tile = -(-max(metas[i]["n_entries"] for i in sel) // 128) * 128
         params = np.zeros((len(sel), 3), dtype=np.int32)
+        streams = []  # (rep_words, def_words, val_words) ragged rows
         for j, i in enumerate(sel):
             cm, bufs = metas[i], parsed[i]
-            if nullable:
-                w = ops.pack_words(bufs[0], pad_words=0)
-                def_words[j, : len(w)] = w
-            w = ops.pack_words(bufs[vbi], pad_words=1)
-            val_word_list.append(w)
-            vw = max(vw, len(w))
-            params[j] = (cm["n_entries"], cm["bufmeta"][vbi]["bits"], 0)
-        val_words = np.zeros((len(sel), vw), dtype=np.uint32)
-        for j, w in enumerate(val_word_list):
-            val_words[j, : len(w)] = w
-        dense, valid = ops.miniblock_decode(
-            def_words, val_words, params, nullable=nullable, fill=0)
-        dense = np.asarray(dense)
-        valid = np.asarray(valid)
+            rw = ops.pack_words(bufs[0], pad_words=1) if rep_bits else None
+            dw = (ops.pack_words(bufs[1 if rep_bits else 0], pad_words=1)
+                  if def_bits else None)
+            vw = ops.pack_words(bufs[vbi], pad_words=1)
+            streams.append((rw, dw, vw))
+            params[j] = (cm["n_entries"], kp[i][0], kp[i][1])
 
-        dt = np.dtype(self.proto.leaf_type.dtype)
+        def stack(rows, active):
+            if not active:
+                return np.zeros((len(rows), 1), dtype=np.uint32)
+            width = max(len(r) for r in rows)
+            out = np.zeros((len(rows), width), dtype=np.uint32)
+            for j, r in enumerate(rows):
+                out[j, : len(r)] = r
+            return out
+
+        rep_np, def_np, vals_np = (np.asarray(a) for a in ops.miniblock_decode(
+            stack([s[0] for s in streams], rep_bits),
+            stack([s[1] for s in streams], def_bits),
+            stack([s[2] for s in streams], True),
+            params, rep_bits=rep_bits, def_bits=def_bits, vpe=vpe,
+            tile_entries=tile, fill=0))
+
         out: List[tuple] = [None] * len(chunk_ids)
         for j, i in enumerate(sel):
             k = metas[i]["n_entries"]
-            v = valid[j, :k]
-            defs = (~v).astype(np.uint8) if nullable else None
-            vals = A.PrimitiveArray(
-                self.proto.leaf_type.with_nullable(False),
-                np.ones(int(v.sum()), bool),
-                dense[j, :k][v].astype(dt),
-            )
-            out[i] = (None, defs, vals)
-        for i, o in enumerate(ok):
-            if not o:
+            rep = rep_np[j, :k].astype(np.uint8) if rep_bits else None
+            defs = def_np[j, :k].astype(np.uint8) if def_bits else None
+            valid = (defs == 0) if defs is not None else np.ones(k, bool)
+            n_valid = int(valid.sum())
+            dense = vals_np[j, : k * vpe]
+            if fsl:
+                vals = A.FixedSizeListArray(
+                    lt.with_nullable(False), np.ones(n_valid, bool),
+                    dense.reshape(k, vpe)[valid].astype(dt),
+                )
+            else:
+                vals = A.PrimitiveArray(
+                    lt.with_nullable(False), np.ones(n_valid, bool),
+                    dense[:k][valid].astype(dt),
+                )
+            out[i] = (rep, defs, vals)
+        for i, p in enumerate(kp):
+            if p is None:
                 out[i] = self._decode_chunk(chunk_ids[i], raws[i])
         return out
 

@@ -21,6 +21,7 @@ __all__ = [
     "control_word_width",
     "pack_control_words",
     "unpack_control_words",
+    "gather_le",
     "pack_levels",
     "unpack_levels",
 ]
@@ -73,6 +74,25 @@ def unpack_control_words(buf: np.ndarray, n: int, max_rep: int, max_def: int):
     defs = (word & np.uint32((1 << db) - 1)).astype(np.uint8) if db else None
     rep = ((word >> np.uint32(db)) & np.uint32((1 << rb) - 1)).astype(np.uint8) if rb else None
     return rep, defs
+
+
+def gather_le(buf: np.ndarray, pos: np.ndarray, width: int) -> np.ndarray:
+    """Gather ``width``-byte little-endian ints at byte positions ``pos``.
+
+    The row-parallel full-zip walk reads control words and length prefixes at
+    many buffer positions per vectorized step; this is its one gather
+    primitive.  Positions are clipped to the buffer so speculative reads past
+    the end (an invalid trailing entry, a truncated scan window) return
+    garbage instead of faulting — callers mask those lanes.
+    """
+    if len(pos) == 0 or width == 0 or len(buf) == 0:
+        return np.zeros(len(pos), dtype=np.uint64)
+    top = max(len(buf) - 1, 0)
+    out = np.zeros(len(pos), dtype=np.uint64)
+    p = np.asarray(pos, dtype=np.int64)
+    for b in range(width):
+        out |= buf[np.minimum(p + b, top)].astype(np.uint64) << np.uint64(8 * b)
+    return out
 
 
 def pack_levels(levels: np.ndarray, max_level: int) -> np.ndarray:

@@ -7,6 +7,11 @@ scalar-prefetched and consumed by the input BlockSpec's index_map, so each
 grid step DMAs exactly one zipped row from HBM into VMEM — one "IOP" per row,
 no gather instructions inside the kernel body.  (This is the same mechanism
 paged-attention KV fetch uses; the repetition index plays the block table.)
+
+Wired into :meth:`repro.core.fullzip.FullZipReader.take` behind the
+``decode="pallas"`` knob: the unique fetched rows are gathered straight into
+request order (``rows`` = the request's inverse permutation, duplicates
+included), replacing the host fan-out permutation with one device gather.
 """
 
 from __future__ import annotations

@@ -1,16 +1,28 @@
 """Pallas TPU kernel: mini-block chunk decode.
 
-One grid step decodes one mini-block chunk (§4.2): unpack the 1-bit
-definition bitmap, unpack the frame-of-reference bit-packed values, and
-scatter them densely (fill at nulls).  Chunk parameters (entry count, value
-bit width, FoR reference) vary per chunk and arrive via scalar prefetch; the
-chunk payloads are padded to a common word count so the BlockSpec tiling is
-static — the mini-block format's power-of-two/8-byte-aligned chunk rules
-(§4.2.1) exist precisely to make this kind of tiling possible.
+One grid step decodes one mini-block chunk (§4.2): unpack the bit-packed
+repetition / definition level streams, unpack the (frame-of-reference)
+bit-packed or byte-packed values, and scatter them densely (fill at nulls).
+Per-chunk parameters (entry count, value bit width, FoR reference) arrive via
+scalar prefetch; chunk payloads are padded to a common word count so the
+BlockSpec tiling is static — the mini-block format's power-of-two/8-byte-
+aligned chunk rules (§4.2.1) exist precisely to make this tiling possible.
 
-VMEM budget: a chunk is ≤32 KiB by construction (12-bit word count), plus
-the (4096,)-value output tile — comfortably inside the ~16 MiB VMEM of a
-TPU core even with double buffering.
+Coverage (static per call, constant per column):
+
+* ``rep_bits``/``def_bits``: 0 (stream absent) or any width — multi-bit
+  definition streams of nested/struct columns decode on device, not just the
+  1-bit flat bitmap.
+* ``vpe`` (values per entry): 1 for primitives, the list size for
+  fixed-size-list chunks — each valid entry owns ``vpe`` consecutive values.
+* values: dense little-endian bit stream at any per-chunk width <= 31 bits
+  (``bitpack``), or byte-aligned FoR (``bytepack``, width*8 bits) with the
+  per-chunk reference added back.
+
+VMEM budget: a chunk is <=32 KiB by construction (12-bit word count), plus
+the ``(tile_entries * vpe,)`` int32 output tile — the reader caps
+``tile_entries * vpe`` so this stays comfortably inside the ~16 MiB VMEM of
+a TPU core even with double buffering.
 """
 
 from __future__ import annotations
@@ -27,72 +39,119 @@ __all__ = ["miniblock_decode_pallas", "MAX_ENTRIES"]
 MAX_ENTRIES = 4096  # the format's per-chunk value ceiling (sec 4.2.1)
 
 
-def _kernel(params_ref, def_ref, val_ref, out_vals_ref, out_valid_ref, *, nullable: bool, fill: int):
+def _iota(n: int) -> jax.Array:
+    """1-D uint32 iota via a 2-D broadcasted iota (TPU needs >=2-D)."""
+    return (
+        jax.lax.broadcasted_iota(jnp.uint32, (n // 128, 128), 0) * 128
+        + jax.lax.broadcasted_iota(jnp.uint32, (n // 128, 128), 1)
+    ).reshape(-1)
+
+
+def _extract(words, bitpos, bits, mask):
+    """Little-endian ``bits``-wide field at ``bitpos`` of a uint32 stream."""
+    w = (bitpos // 32).astype(jnp.int32)
+    sh = bitpos % 32
+    w0 = jnp.take(words, w, axis=0)
+    w1 = jnp.take(words, jnp.minimum(w + 1, words.shape[0] - 1), axis=0)
+    hi_shift = (jnp.uint32(32) - sh) & jnp.uint32(31)
+    hi = jnp.where(sh > 0, w1 << hi_shift, jnp.uint32(0))
+    return ((w0 >> sh) | hi) & mask
+
+
+def _kernel(params_ref, rep_ref, def_ref, val_ref,
+            out_rep_ref, out_def_ref, out_val_ref,
+            *, rep_bits: int, def_bits: int, vpe: int, tile: int, fill: int):
     c = pl.program_id(0)
     n = params_ref[c, 0]
     bits = params_ref[c, 1].astype(jnp.uint32)
     ref = params_ref[c, 2]
 
-    j = (
-        jax.lax.broadcasted_iota(jnp.uint32, (MAX_ENTRIES // 128, 128), 0) * 128
-        + jax.lax.broadcasted_iota(jnp.uint32, (MAX_ENTRIES // 128, 128), 1)
-    ).reshape(-1)
+    j = _iota(tile)
     in_range = j < n.astype(jnp.uint32)
-    if nullable:
-        dw = def_ref[0, :]
-        w = (j // 32).astype(jnp.int32)
-        d = (jnp.take(dw, w, axis=0) >> (j % 32)) & jnp.uint32(1)
+    if rep_bits:
+        rep = _extract(rep_ref[0, :], j * rep_bits,
+                       jnp.uint32(rep_bits), jnp.uint32((1 << rep_bits) - 1))
+        out_rep_ref[...] = jnp.where(in_range, rep.astype(jnp.int32), 0).reshape(
+            tile // 128, 128)
+    else:
+        out_rep_ref[...] = jnp.zeros((tile // 128, 128), jnp.int32)
+    if def_bits:
+        d = _extract(def_ref[0, :], j * def_bits,
+                     jnp.uint32(def_bits), jnp.uint32((1 << def_bits) - 1))
         valid = (d == 0) & in_range
+        out_def_ref[...] = jnp.where(in_range, d.astype(jnp.int32), 0).reshape(
+            tile // 128, 128)
     else:
         valid = in_range
+        out_def_ref[...] = jnp.zeros((tile // 128, 128), jnp.int32)
+    # value slot of each entry: cumsum over the validity mask
     vidx = (jnp.cumsum(valid.astype(jnp.int32)) - 1).astype(jnp.uint32)
-    bitpos = jnp.where(valid, vidx, 0) * bits
-    w = (bitpos // 32).astype(jnp.int32)
-    sh = bitpos % 32
-    vw = val_ref[0, :]
-    w0 = jnp.take(vw, w, axis=0)
-    w1 = jnp.take(vw, jnp.minimum(w + 1, vw.shape[0] - 1), axis=0)
-    hi_shift = (jnp.uint32(32) - sh) & jnp.uint32(31)
-    hi = jnp.where(sh > 0, w1 << hi_shift, jnp.uint32(0))
-    mask = jnp.where(bits >= 32, jnp.uint32(0xFFFFFFFF), (jnp.uint32(1) << bits) - jnp.uint32(1))
-    vals = ((w0 >> sh) | hi) & mask
-    out = jnp.where(valid, vals.astype(jnp.int32) + ref, fill)
-    out_vals_ref[...] = out.reshape(MAX_ENTRIES // 128, 128)
-    out_valid_ref[...] = valid.reshape(MAX_ENTRIES // 128, 128)
+
+    # each valid entry owns vpe consecutive values in the dense stream
+    k = _iota(tile * vpe)
+    e = (k // jnp.uint32(vpe)).astype(jnp.int32)
+    valid_k = jnp.take(valid, e, axis=0)
+    slot = jnp.take(vidx, e, axis=0) * jnp.uint32(vpe) + k % jnp.uint32(vpe)
+    bitpos = jnp.where(valid_k, slot, 0) * bits
+    mask = jnp.where(bits >= 32, jnp.uint32(0xFFFFFFFF),
+                     (jnp.uint32(1) << bits) - jnp.uint32(1))
+    vals = _extract(val_ref[0, :], bitpos, bits, mask)
+    out = jnp.where(valid_k, vals.astype(jnp.int32) + ref, fill)
+    out_val_ref[...] = out.reshape(tile * vpe // 128, 128)
 
 
-@functools.partial(jax.jit, static_argnames=("nullable", "fill", "interpret"))
+@functools.partial(
+    jax.jit,
+    static_argnames=("rep_bits", "def_bits", "vpe", "tile_entries", "fill",
+                     "interpret"))
 def miniblock_decode_pallas(
-    def_words: jax.Array,  # (C, DW) uint32
+    rep_words: jax.Array,  # (C, RW) uint32 (dummy (C, 1) when rep_bits == 0)
+    def_words: jax.Array,  # (C, DW) uint32 (dummy (C, 1) when def_bits == 0)
     val_words: jax.Array,  # (C, VW) uint32
     params: jax.Array,  # (C, 3) int32: [n_entries, vbits, ref]
     *,
-    nullable: bool,
+    rep_bits: int,
+    def_bits: int,
+    vpe: int = 1,
+    tile_entries: int = MAX_ENTRIES,
     fill: int = 0,
     interpret: bool = True,
 ):
-    C, DW = def_words.shape
-    VW = val_words.shape[1]
-    R = MAX_ENTRIES // 128
+    """Decode C chunks -> (rep, defs, vals) int32 tiles.
+
+    ``rep``/``defs`` are ``(C, tile_entries)`` level streams (zero where the
+    stream is absent or past ``n_entries``); ``vals`` is the dense
+    ``(C, tile_entries * vpe)`` value tile with ``fill`` at nulls.
+    """
+    assert tile_entries % 128 == 0 and (tile_entries * vpe) % 128 == 0
+    C = params.shape[0]
+    RW, DW, VW = rep_words.shape[1], def_words.shape[1], val_words.shape[1]
+    R = tile_entries // 128
+    RV = tile_entries * vpe // 128
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,
         grid=(C,),
         in_specs=[
+            pl.BlockSpec((1, RW), lambda c, p: (c, 0)),
             pl.BlockSpec((1, DW), lambda c, p: (c, 0)),
             pl.BlockSpec((1, VW), lambda c, p: (c, 0)),
         ],
         out_specs=[
             pl.BlockSpec((R, 128), lambda c, p: (c, 0)),
             pl.BlockSpec((R, 128), lambda c, p: (c, 0)),
+            pl.BlockSpec((RV, 128), lambda c, p: (c, 0)),
         ],
     )
-    vals, valid = pl.pallas_call(
-        functools.partial(_kernel, nullable=nullable, fill=fill),
+    rep, defs, vals = pl.pallas_call(
+        functools.partial(_kernel, rep_bits=rep_bits, def_bits=def_bits,
+                          vpe=vpe, tile=tile_entries, fill=fill),
         grid_spec=grid_spec,
         out_shape=[
             jax.ShapeDtypeStruct((C * R, 128), jnp.int32),
-            jax.ShapeDtypeStruct((C * R, 128), jnp.bool_),
+            jax.ShapeDtypeStruct((C * R, 128), jnp.int32),
+            jax.ShapeDtypeStruct((C * RV, 128), jnp.int32),
         ],
         interpret=interpret,
-    )(params, def_words, val_words)
-    return vals.reshape(C, MAX_ENTRIES), valid.reshape(C, MAX_ENTRIES)
+    )(params, rep_words, def_words, val_words)
+    return (rep.reshape(C, tile_entries), defs.reshape(C, tile_entries),
+            vals.reshape(C, tile_entries * vpe))

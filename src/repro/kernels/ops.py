@@ -54,22 +54,35 @@ def bitunpack(words: jax.Array, n: int, bits: int, *, use_pallas: bool = True) -
 
 
 def miniblock_decode(
+    rep_words: jax.Array,
     def_words: jax.Array,
     val_words: jax.Array,
     params: jax.Array,
     *,
-    nullable: bool,
+    rep_bits: int,
+    def_bits: int,
+    vpe: int = 1,
+    tile_entries: int = MAX_ENTRIES,
     fill: int = 0,
     use_pallas: bool = True,
 ):
-    """Decode C mini-block chunks -> ((C, 4096) int32, (C, 4096) bool)."""
+    """Decode C mini-block chunks -> ``(rep, defs, vals)`` int32 tiles.
+
+    ``rep``/``defs`` are ``(C, tile_entries)``; ``vals`` is the dense
+    ``(C, tile_entries * vpe)`` tile (``vpe`` values per valid entry —
+    fixed-size-list chunks set it to the list size).  Entries past a chunk's
+    ``n_entries`` and null value slots read as 0 / ``fill``.
+    """
     if not use_pallas:
         return ref.miniblock_decode_ref(
-            def_words, val_words, params[:, 0], params[:, 1], params[:, 2],
-            MAX_ENTRIES, nullable, fill,
+            rep_words, def_words, val_words,
+            params[:, 0], params[:, 1], params[:, 2],
+            tile_entries, rep_bits, def_bits, vpe, fill,
         )
     return miniblock_decode_pallas(
-        def_words, val_words, params, nullable=nullable, fill=fill,
+        rep_words, def_words, val_words, params,
+        rep_bits=rep_bits, def_bits=def_bits, vpe=vpe,
+        tile_entries=tile_entries, fill=fill,
         interpret=not on_tpu(),
     )
 

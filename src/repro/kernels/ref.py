@@ -27,48 +27,72 @@ def bitunpack_ref(words: jax.Array, n: int, bits: int) -> jax.Array:
     return ((w0 >> sh) | hi) & mask
 
 
+def _extract_ref(words: jax.Array, bitpos: jax.Array, bits, mask) -> jax.Array:
+    """Little-endian dynamic-width field extraction from uint32 words."""
+    w = (bitpos // 32).astype(jnp.int32)
+    sh = bitpos % 32
+    w0 = words[w]
+    w1 = words[jnp.minimum(w + 1, words.shape[0] - 1)]
+    hi_shift = (jnp.uint32(32) - sh) & jnp.uint32(31)
+    hi = jnp.where(sh > 0, w1 << hi_shift, jnp.uint32(0))
+    return ((w0 >> sh) | hi) & mask
+
+
 def miniblock_decode_ref(
-    def_words: jax.Array,  # (C, DW) uint32 bit-packed 1-bit def levels
-    val_words: jax.Array,  # (C, VW) uint32 bit-packed FoR values
+    rep_words: jax.Array,  # (C, RW) uint32 bit-packed rep levels (dummy if absent)
+    def_words: jax.Array,  # (C, DW) uint32 bit-packed def levels (dummy if absent)
+    val_words: jax.Array,  # (C, VW) uint32 bit/byte-packed FoR values
     n_entries: jax.Array,  # (C,) int32 valid entries per chunk
     vbits: jax.Array,  # (C,) int32 value bit width per chunk
     refs: jax.Array,  # (C,) int32 frame-of-reference per chunk
     max_entries: int,
-    nullable: bool,
+    rep_bits: int,
+    def_bits: int,
+    vpe: int = 1,
     fill: int = 0,
 ):
-    """Decode C mini-block chunks -> dense (C, max_entries) int32 + validity.
+    """Decode C mini-block chunks -> ``(rep, defs, vals)`` int32 tiles.
 
-    Models the §4.2 scan path for flat integer columns (the training-token
-    pipeline): per chunk, unpack the definition bitmap, unpack the sparse
-    bit-packed values, and scatter them densely with ``fill`` at nulls.
+    Models the §4.2 decode for integer chunks: per chunk, unpack the rep/def
+    level streams (widths are column constants; 0 = stream absent), unpack
+    the sparse packed values (``vpe`` consecutive values per valid entry —
+    fixed-size lists set ``vpe`` to the list size) and scatter them densely
+    with ``fill`` at nulls.  Ground truth for the Pallas kernel.
     """
 
-    def one(dw, vw, n, bits, ref):
+    def one(rw, dw, vw, n, bits, ref):
         j = jnp.arange(max_entries, dtype=jnp.uint32)
         in_range = j < n.astype(jnp.uint32)
-        if nullable:
-            d = bitunpack_ref(dw, max_entries, 1)
+        if rep_bits:
+            rep = _extract_ref(rw, j * jnp.uint32(rep_bits),
+                               jnp.uint32(rep_bits),
+                               jnp.uint32((1 << rep_bits) - 1))
+            rep = jnp.where(in_range, rep.astype(jnp.int32), 0)
+        else:
+            rep = jnp.zeros(max_entries, jnp.int32)
+        if def_bits:
+            d = _extract_ref(dw, j * jnp.uint32(def_bits),
+                             jnp.uint32(def_bits),
+                             jnp.uint32((1 << def_bits) - 1))
             valid = (d == 0) & in_range
+            d = jnp.where(in_range, d.astype(jnp.int32), 0)
         else:
             valid = in_range
-        vidx = jnp.cumsum(valid.astype(jnp.int32)) - 1
-        # dynamic bit width unpack
-        bitpos = jnp.where(valid, vidx, 0).astype(jnp.uint32) * bits.astype(jnp.uint32)
-        w = (bitpos // 32).astype(jnp.int32)
-        sh = bitpos % 32
-        w0 = vw[w]
-        w1 = vw[jnp.minimum(w + 1, vw.shape[0] - 1)]
-        hi_shift = (jnp.uint32(32) - sh) & jnp.uint32(31)
-        hi = jnp.where(sh > 0, w1 << hi_shift, jnp.uint32(0))
+            d = jnp.zeros(max_entries, jnp.int32)
+        vidx = (jnp.cumsum(valid.astype(jnp.int32)) - 1).astype(jnp.uint32)
+        k = jnp.arange(max_entries * vpe, dtype=jnp.uint32)
+        e = (k // jnp.uint32(vpe)).astype(jnp.int32)
+        valid_k = valid[e]
+        slot = vidx[e] * jnp.uint32(vpe) + k % jnp.uint32(vpe)
+        bitpos = jnp.where(valid_k, slot, 0) * bits.astype(jnp.uint32)
         mask = jnp.where(
-            bits >= 32, jnp.uint32(0xFFFFFFFF), (jnp.uint32(1) << bits.astype(jnp.uint32)) - 1
-        )
-        vals = ((w0 >> sh) | hi) & mask
-        out = jnp.where(valid, vals.astype(jnp.int32) + ref, fill)
-        return out, valid
+            bits >= 32, jnp.uint32(0xFFFFFFFF),
+            (jnp.uint32(1) << bits.astype(jnp.uint32)) - 1)
+        vals = _extract_ref(vw, bitpos, bits, mask)
+        out = jnp.where(valid_k, vals.astype(jnp.int32) + ref, fill)
+        return rep, d, out
 
-    return jax.vmap(one)(def_words, val_words, n_entries, vbits, refs)
+    return jax.vmap(one)(rep_words, def_words, val_words, n_entries, vbits, refs)
 
 
 def fullzip_gather_ref(zipped: jax.Array, rows: jax.Array) -> jax.Array:

@@ -23,46 +23,58 @@ def test_bitunpack_sweep(bits, n):
     assert (got_ref == v).all()
 
 
-@pytest.mark.parametrize("nullable", [True, False])
+@pytest.mark.parametrize("rep_bits,def_bits", [(0, 0), (0, 1), (0, 2), (1, 2), (2, 3)])
+@pytest.mark.parametrize("vpe", [1, 4])
 @pytest.mark.parametrize("n_chunks", [1, 4])
-def test_miniblock_decode_sweep(nullable, n_chunks):
+def test_miniblock_decode_sweep(rep_bits, def_bits, vpe, n_chunks):
+    """Widened kernel coverage: any rep/def level width, values-per-entry
+    (fixed-size lists), per-chunk bit width + FoR reference."""
     C = n_chunks
-    DW = (MAX_ENTRIES + 31) // 32 + 1
-    VW = MAX_ENTRIES + 2
-    def_words = np.zeros((C, DW), np.uint32)
-    val_words = np.zeros((C, VW), np.uint32)
+    tile = 1024
+    rep_words = np.zeros((C, (tile * rep_bits + 31) // 32 + 1 if rep_bits else 1), np.uint32)
+    def_words = np.zeros((C, (tile * def_bits + 31) // 32 + 1 if def_bits else 1), np.uint32)
+    val_words = np.zeros((C, (tile * vpe * 24 + 31) // 32 + 1), np.uint32)
     params = np.zeros((C, 3), np.int32)
-    want_vals, want_valid = [], []
+    want = []
     for c in range(C):
-        n = int(rng.integers(50, MAX_ENTRIES))
+        n = int(rng.integers(50, tile))
         bits = int(rng.integers(1, 24))
         ref = int(rng.integers(-100, 100))
-        if nullable:
-            defs = (rng.random(n) < 0.2).astype(np.uint8)
-        else:
-            defs = np.zeros(n, np.uint8)
+        reps = rng.integers(0, 2 ** rep_bits, n, dtype=np.uint64) if rep_bits else None
+        defs = (rng.integers(0, 2 ** def_bits, n, dtype=np.uint64)
+                if def_bits else np.zeros(n, np.uint64))
         valid = defs == 0
-        vals = rng.integers(0, 2 ** bits, int(valid.sum()), dtype=np.uint64)
-        dw = ops.pack_words(bitpack(defs.astype(np.uint64), 1))
-        vw = ops.pack_words(bitpack(vals, bits))
-        def_words[c, : len(dw)] = dw
-        val_words[c, : len(vw)] = vw
+        vals = rng.integers(0, 2 ** bits, int(valid.sum()) * vpe, dtype=np.uint64)
+        if rep_bits:
+            w = ops.pack_words(bitpack(reps, rep_bits))
+            rep_words[c, : len(w)] = w
+        if def_bits:
+            w = ops.pack_words(bitpack(defs, def_bits))
+            def_words[c, : len(w)] = w
+        w = ops.pack_words(bitpack(vals, bits))
+        val_words[c, : len(w)] = w
         params[c] = [n, bits, ref]
-        ev = np.zeros(MAX_ENTRIES, np.int32)
-        ev[:n][valid] = vals.astype(np.int64) + ref
-        em = np.zeros(MAX_ENTRIES, bool)
-        em[:n] = valid
-        want_vals.append(ev)
-        want_valid.append(em)
+        er = np.zeros(tile, np.int32)
+        if rep_bits:
+            er[:n] = reps
+        ed = np.zeros(tile, np.int32)
+        ed[:n] = defs
+        ev = np.zeros(tile * vpe, np.int32)
+        vmask = np.zeros(tile * vpe, bool)
+        vmask[: n * vpe] = np.repeat(valid, vpe)
+        ev[vmask] = vals.astype(np.int64) + ref
+        want.append((er, ed, ev, vmask))
     for use_pallas in [True, False]:
-        vs, ms = ops.miniblock_decode(
-            jnp.asarray(def_words), jnp.asarray(val_words), jnp.asarray(params),
-            nullable=nullable, use_pallas=use_pallas)
-        for c in range(C):
-            assert (np.asarray(ms[c]) == want_valid[c]).all()
-            got = np.where(want_valid[c], np.asarray(vs[c]), 0)
-            want = np.where(want_valid[c], want_vals[c], 0)
-            np.testing.assert_array_equal(got, want)
+        r, d, v = ops.miniblock_decode(
+            jnp.asarray(rep_words), jnp.asarray(def_words),
+            jnp.asarray(val_words), jnp.asarray(params),
+            rep_bits=rep_bits, def_bits=def_bits, vpe=vpe, tile_entries=tile,
+            use_pallas=use_pallas)
+        for c, (er, ed, ev, vmask) in enumerate(want):
+            np.testing.assert_array_equal(np.asarray(r[c]), er)
+            np.testing.assert_array_equal(np.asarray(d[c]), ed)
+            np.testing.assert_array_equal(
+                np.where(vmask, np.asarray(v[c]), 0), ev)
 
 
 @pytest.mark.parametrize("stride", [8, 24, 136, 512])
@@ -118,11 +130,13 @@ def test_kernel_matches_host_miniblock_column():
         def_words[c, : len(dw)] = dw
         val_words[c, : len(vw)] = vw
         params[c] = [ne, bits, ref]
-    vs, ms = ops.miniblock_decode(jnp.asarray(def_words), jnp.asarray(val_words),
-                                  jnp.asarray(params), nullable=True)
+    _, ds, vs = ops.miniblock_decode(
+        jnp.asarray(np.zeros((C, 1), np.uint32)), jnp.asarray(def_words),
+        jnp.asarray(val_words), jnp.asarray(params),
+        rep_bits=0, def_bits=1)
     got_vals = []
     for c, (ne, *_rest) in enumerate(packed):
-        m = np.asarray(ms[c][:ne])
+        m = np.asarray(ds[c][:ne]) == 0
         got_vals.append(np.asarray(vs[c][:ne])[m])
     got = np.concatenate(got_vals)
     np.testing.assert_array_equal(got, vals[validity])
