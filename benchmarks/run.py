@@ -21,7 +21,9 @@ simulator's block-classification overhead.  The ``store`` benchmark
 reproduces the headline cold-S3 / NVMe-warm / flat-NVMe comparison
 regardless of the flag; the ``dataset`` benchmark compares one shared NVMe
 budget against per-file split stores over a fragmented dataset
-(``BENCH_dataset.json``).
+(``BENCH_dataset.json``); the ``ingest`` benchmark compares write-back vs
+write-through flush policies on append-heavy and mixed append/take ingest
+into a live versioned dataset (``BENCH_ingest.json``).
 """
 
 from __future__ import annotations
@@ -720,6 +722,99 @@ def dataset_take():
         "shared store must warm better than split per-file budgets"
 
 
+def ingest_bench():
+    """The write-path headline (BENCH_ingest.json): append-heavy and mixed
+    append/take ingest into a live dataset, write-back vs write-through
+    flush under the same NVMe budget.
+
+    Every config appends the same fragments and (in the mixed workload)
+    takes the same random rows, committing every ``commit_every`` appends.
+    Write-through pays one backing (S3) queue drain per append; write-back
+    absorbs appends into the NVMe tier dirty and batches the S3 writes at
+    the commit fence / watermark / deadline — same bytes eventually written,
+    far fewer S3 round trips, with the bytes-at-risk (``dirty_bytes`` /
+    crash-``lost_bytes``) accounting making the durability trade explicit.
+    The gate: write-back must beat write-through on mixed append/take
+    NVMe-warm throughput (modelled, same budget)."""
+    from repro.dataset import DatasetWriter
+    from repro.store import TieredStore
+
+    n_appends = 6 if SMOKE else 24
+    rows_per = 400 if SMOKE else 2_000
+    take_n = 200 if SMOKE else 1_000
+    commit_every = 3
+    width = 64  # float32 lanes -> 256 B rows
+    n_total = n_appends * rows_per
+    budget = max(int(1.5 * n_total * width * 4), 1 << 20)
+
+    def run_config(policy, workload):
+        rng = np.random.default_rng(0)  # same draws for every config
+        w = DatasetWriter(
+            store=lambda d: TieredStore.cached(d, cache_bytes=budget),
+            flush=policy, opts=WriteOptions("lance-fullzip"))
+        n_ops = n_total
+        t0 = time.perf_counter()
+        for i in range(n_appends):
+            vals = rng.standard_normal((rows_per, width)).astype(np.float32)
+            arr = A.FixedSizeListArray(
+                T.FixedSizeList(T.Primitive("float32", nullable=False), width),
+                np.ones(rows_per, bool), vals)
+            w.append({"c": arr}, commit=(i + 1) % commit_every == 0)
+            if workload == "mixed" and w.version:
+                rows = rng.integers(0, w.n_rows, take_n)
+                w.take("c", rows)
+                n_ops += take_n
+        w.commit()
+        dt = time.perf_counter() - t0
+        t_model = w.modelled_time()
+        tiers = {s.name: s for s in w.tier_stats()}
+        s3, nvme = tiers["s3"], tiers["nvme_970evo"]
+        return {
+            "rows_per_s": round(n_ops / max(dt, t_model)),
+            "cpu_s": round(dt, 6), "model_io_s": round(t_model, 6),
+            "s3_write_iops": s3.write_iops, "s3_flush_iops": s3.flush_iops,
+            "s3_bytes_written": s3.bytes_written,
+            "s3_read_iops": s3.n_iops,
+            "nvme_write_iops": nvme.write_iops,
+            "nvme_hit_rate": round(nvme.hit_rate, 4)
+            if nvme.hits + nvme.misses else None,
+            "peak_dirty_after_run": nvme.dirty_bytes,
+            "logical_write_iops": w.write_stats().n_iops,
+            "logical_write_bytes": w.write_stats().bytes_read,
+        }
+
+    results = {"meta": {"n_appends": n_appends, "rows_per_append": rows_per,
+                        "take_n": take_n, "commit_every": commit_every,
+                        "row_bytes": width * 4, "nvme_budget_bytes": budget,
+                        "smoke": SMOKE}}
+    for workload in ("append", "mixed"):
+        for policy in ("write-through", "write-back"):
+            cell = run_config(policy, workload)
+            results[f"{workload}/{policy}"] = cell
+            _emit(f"ingest/{workload}/{policy}", cell["cpu_s"] * 1e6,
+                  f"rows_per_s={cell['rows_per_s']};"
+                  f"s3_write_iops={cell['s3_write_iops']};"
+                  f"model_io_s={cell['model_io_s']}")
+    wb, wt = results["mixed/write-back"], results["mixed/write-through"]
+    results["headline"] = {
+        "gate": "mixed write-back rows_per_s > mixed write-through",
+        "mixed_speedup": round(wb["rows_per_s"] / max(wt["rows_per_s"], 1), 2),
+        "append_speedup": round(
+            results["append/write-back"]["rows_per_s"]
+            / max(results["append/write-through"]["rows_per_s"], 1), 2),
+        "s3_write_iops_saved_mixed": wt["s3_write_iops"] - wb["s3_write_iops"],
+    }
+    _emit("ingest/headline", 0.0,
+          f"mixed_speedup={results['headline']['mixed_speedup']}x;"
+          f"append_speedup={results['headline']['append_speedup']}x;"
+          "path=BENCH_ingest.json")
+    assert wb["rows_per_s"] > wt["rows_per_s"], \
+        "write-back must beat write-through on mixed append/take throughput"
+    with open("BENCH_ingest.json", "w") as f:
+        json.dump(results, f, indent=1, sort_keys=True)
+    _emit("ingest/written", 0.0, "path=BENCH_ingest.json")
+
+
 def kernel_bench():
     """Device decode paths: ref-oracle throughput on CPU + kernel validation
     (interpret mode executes the kernel body; wall-time is not TPU time)."""
@@ -780,7 +875,7 @@ ALL = [fig1_device_model, fig10_parquet_random_access,
        fig11_encodings_random_access, fig12_fullzip_vs_miniblock,
        fig13_compression, fig14_16_full_scan, fig17_scan_decode_cost,
        fig18_struct_packing, store_tiering, take_decode, decode_bench,
-       dataset_take, kernel_bench, loader_bench]
+       dataset_take, ingest_bench, kernel_bench, loader_bench]
 
 
 def _parse_args(argv):

@@ -1,9 +1,11 @@
-"""Quickstart: the paper's core idea in 60 lines.
+"""Quickstart: the paper's core idea in 80 lines.
 
 Writes one table in four structural encodings, then compares random access
 IOPS / read amplification / search-cache size — reproducing the paper's
 headline numbers (full-zip: <=2 IOPS & no cache; Arrow List<String>: 5 IOPS
 in 3 dependent phases; Parquet: 1 IOP with page-size amplification).
+Then the ingest path: append fragments to a live versioned dataset through
+the write-back store and take freshly written rows back out, NVMe-warm.
 
   PYTHONPATH=src python examples/quickstart.py
 """
@@ -16,6 +18,29 @@ from repro.data import synth
 
 N_ROWS = 4_000
 TAKE = 64
+
+
+def append_then_take():
+    """Ingest: three appends -> three manifest versions, then random access
+    over the committed dataset (served warm from the blocks the write path
+    just filled)."""
+    from repro.dataset import DatasetWriter
+
+    w = DatasetWriter(flush="write-back", opts=WriteOptions("lance"))
+    for _ in range(3):
+        w.append({"c": synth.paper_type("string", 1_000, seed=w.version)})
+    rng = np.random.default_rng(0)
+    rows = rng.choice(w.n_rows, TAKE, replace=False)
+    w.reset_io()
+    w.take("c", rows)
+    st = w.io_stats()
+    tiers = {s.name: s for s in w.tier_stats()}
+    print(f"appended 3 fragments -> manifest v{w.version} "
+          f"({w.n_rows} rows, dirty after commit: {w.dirty_bytes} B)")
+    print(f"take {TAKE} fresh rows: {st.n_iops/TAKE:.2f} iops/row, "
+          f"nvme hit-rate {tiers['nvme_970evo'].hit_rate:.2f}, "
+          f"s3 reads {tiers['s3'].n_iops} (warm from the write path)")
+    print(f"old versions stay readable: v1 has {w.reader(1).n_rows} rows\n")
 
 
 def main():
@@ -42,6 +67,7 @@ def main():
                   f"{st.read_amplification:9.1f} {st.max_phase:7d} "
                   f"{fr.search_cache_bytes():9d} {TAKE/t:16,.0f}")
         print()
+    append_then_take()
 
 
 if __name__ == "__main__":

@@ -2,12 +2,16 @@
 # global block-address space, read through ONE shared BlockCache +
 # IOScheduler so take-heavy serving over many Lance files sees a single
 # NVMe budget, cross-file per-phase coalescing, and workload-driven cache
-# admission.
+# admission.  The ingest side (DatasetWriter) appends fragments through the
+# write-back store and commits versioned manifests with a flush-then-commit
+# crash-safety fence.
 
 from .manifest import (  # noqa: F401
     Fragment,
     Manifest,
     build_dataset_disk,
+    footer_meta,
     write_fragments,
 )
 from .reader import DatasetReader  # noqa: F401
+from .writer import DatasetWriter  # noqa: F401

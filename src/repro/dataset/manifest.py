@@ -17,6 +17,14 @@ Both mappings live here:
 
 The manifest is built by parsing each file's footer (schema + row counts);
 schemas must match across fragments.
+
+Manifests are **versioned**: the dataset write path (`repro.dataset.writer`)
+commits a new immutable ``Manifest`` (``version`` v1..vN) after every
+flushed append/compaction, each holding its own fragment list snapshot.
+Fragment payloads are never overwritten — the global address space is
+append-only — so every committed version stays readable forever (time
+travel) and a crash that tears uncommitted bytes can never reach back into
+a committed version's address ranges.
 """
 
 from __future__ import annotations
@@ -30,7 +38,8 @@ from ..core import arrays as A
 from ..core.file import WriteOptions, read_footer, write_table
 from ..core.io_sim import Disk
 
-__all__ = ["Fragment", "Manifest", "build_dataset_disk", "write_fragments"]
+__all__ = ["Fragment", "Manifest", "build_dataset_disk", "footer_meta",
+           "write_fragments"]
 
 FRAGMENT_ALIGN = 8  # byte alignment of fragment bases in the global space
 
@@ -50,17 +59,27 @@ class Fragment:
         return self.row_start + self.n_rows
 
 
-def _parse_footer(fb: bytes) -> Dict:
+def footer_meta(fb: bytes) -> Dict:
+    """Parse a Lance file's footer from raw bytes (schema + leaf metadata)."""
     meta, _ = read_footer(lambda o, s: fb[o : o + s], len(fb))
     return meta
 
 
-class Manifest:
-    """Fragment list + the global row/byte address maps."""
+_parse_footer = footer_meta  # internal alias (kept for call sites)
 
-    def __init__(self, fragments: Sequence[Fragment], columns: List[Dict]):
+
+class Manifest:
+    """Fragment list + the global row/byte address maps.
+
+    ``version`` is 0 for a plain (unversioned) manifest built directly from
+    files; the dataset writer numbers its committed manifests v1..vN.
+    """
+
+    def __init__(self, fragments: Sequence[Fragment], columns: List[Dict],
+                 version: int = 0):
         self.fragments: List[Fragment] = list(fragments)
         self.columns = columns  # schema from fragment 0's footer
+        self.version = int(version)
         self.n_rows = sum(f.n_rows for f in self.fragments)
         # row_starts[f] = first global row of fragment f (monotone, len F)
         self.row_starts = np.array([f.row_start for f in self.fragments],

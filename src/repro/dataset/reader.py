@@ -55,11 +55,35 @@ class DatasetReader:
                  decode: Optional[str] = None, dict_cached: bool = False):
         from ..store import IOScheduler, make_store
 
-        self.manifest, self.disk = build_dataset_disk(files)
-        self.store = make_store(store, self.disk)
-        self.scheduler = IOScheduler(self.store, queue_depth=queue_depth,
-                                     readahead=readahead)
-        self.fragments: List[FileReader] = [
+        manifest, disk = build_dataset_disk(files)
+        scheduler = IOScheduler(make_store(store, disk),
+                                queue_depth=queue_depth, readahead=readahead)
+        self._bind(manifest, disk, scheduler, decode=decode,
+                   dict_cached=dict_cached)
+
+    @classmethod
+    def from_manifest(cls, manifest: Manifest, disk, scheduler,
+                      decode: Optional[str] = None, dict_cached: bool = False,
+                      readers: Optional[List[FileReader]] = None,
+                      ) -> "DatasetReader":
+        """View an already-materialized dataset (a manifest *version* over a
+        shared disk + scheduler) without rebuilding the address space.  The
+        dataset writer uses this for time travel: one reader per committed
+        version, all sharing the writer's store/cache.  ``readers`` supplies
+        pre-built per-fragment ``FileReader``\\ s (cached by the writer so a
+        fragment's footer is parsed once, not once per version)."""
+        self = cls.__new__(cls)
+        self._bind(manifest, disk, scheduler, decode=decode,
+                   dict_cached=dict_cached, readers=readers)
+        return self
+
+    def _bind(self, manifest, disk, scheduler, decode=None,
+              dict_cached=False, readers=None):
+        self.manifest = manifest
+        self.disk = disk
+        self.store = scheduler.store
+        self.scheduler = scheduler
+        self.fragments: List[FileReader] = readers if readers is not None else [
             FileReader(DiskView(self.disk, f.base, f.nbytes),
                        scheduler=self.scheduler, base=f.base,
                        decode=decode, dict_cached=dict_cached)

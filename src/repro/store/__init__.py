@@ -2,15 +2,20 @@
 # scheduler.  Sits between the structural encodings and the raw Disk —
 # FileReader opens a ReadBatch per take/scan, the scheduler coalesces per
 # dependency phase, sector-aligns, classifies against the cache hierarchy
-# and prices each tier with the paper's Fig-1 device models.
+# and prices each tier with the paper's Fig-1 device models.  The ingest
+# path mirrors it: WriteBatch absorbs appends, FlushPolicy decides when
+# dirty blocks become durable on the backing device (write-through /
+# write-back with deadline+watermark / flush-on-evict).
 
 from .cache import BlockCache  # noqa: F401
+from .flush import FlushPolicy, SimulatedCrash  # noqa: F401
 from .prefetch import SequentialReadahead  # noqa: F401
 from .scheduler import (  # noqa: F401
     CacheTier,
     IOScheduler,
     ReadBatch,
     TieredStore,
+    WriteBatch,
     make_store,
 )
 from .stats import TierStats  # noqa: F401

@@ -40,11 +40,13 @@ from ..core.io_sim import (
     trace_stats,
 )
 from .cache import BlockCache
+from .flush import FlushPolicy
 from .prefetch import SequentialReadahead
 from .stats import TierStats
 from .workload import WorkloadStats
 
-__all__ = ["CacheTier", "TieredStore", "ReadBatch", "IOScheduler", "make_store"]
+__all__ = ["CacheTier", "TieredStore", "ReadBatch", "WriteBatch",
+           "IOScheduler", "make_store"]
 
 DEFAULT_SECTOR = 4096
 DEFAULT_CACHE_BYTES = 64 << 20
@@ -80,6 +82,7 @@ class TieredStore:
         self.backing_stats = TierStats(backing.name)
         self.levels: List[CacheTier] = list(levels)
         self.sector = int(sector)
+        self.flush_policy: Optional[FlushPolicy] = None
         for lvl in self.levels:
             if lvl.cache.block_bytes != self.sector:
                 raise ValueError("cache block size must equal the store sector")
@@ -195,6 +198,77 @@ class TieredStore:
         for lvl in self.levels:
             lvl.stats.end_batch()
 
+    # -- write path ----------------------------------------------------------
+    def set_flush_policy(self, policy: Optional[FlushPolicy]) -> None:
+        """Attach the write-path policy (see :mod:`repro.store.flush`) and
+        wire the fastest tier's eviction hook so dirty victims are written
+        back before their slot is reused (flush-on-evict, always on)."""
+        self.flush_policy = policy
+        if self.levels:
+            if policy is None:
+                self.levels[0].cache.on_evict = None
+            else:
+                self.levels[0].cache.on_evict = (
+                    lambda bid, dirty: policy.on_evict(self, bid, dirty))
+
+    def dispatch_write_extent(self, lo: int, hi: int, phase: int = 0,
+                              flush: bool = False) -> None:
+        """Price one sector-aligned write on the backing device and fill the
+        written blocks clean into the cache tiers (a write-through fill:
+        subsequent reads are warm; the fill bypasses the admission filter —
+        admission polices *reads*, and these are the writer's own freshest
+        bytes).  The flush path skips the fill (its blocks are already
+        resident dirty)."""
+        lo, hi = int(lo), int(hi)
+        if hi <= lo:
+            return
+        b0 = lo // self.sector
+        b1 = (hi + self.sector - 1) // self.sector
+        self.backing_stats.add_write_op((b1 - b0) * self.sector, phase, flush)
+        if not flush:
+            for bid in range(b0, b1):
+                for lvl in self.levels:
+                    lvl.cache.fill(bid)
+
+    def flush_all(self) -> int:
+        """Commit barrier: make every dirty block durable (no-op without a
+        write-back policy)."""
+        if self.flush_policy is None:
+            return 0
+        return self.flush_policy.flush_all(self)
+
+    def dirty_extents(self) -> List[Tuple[int, int]]:
+        """Contiguous byte extents of the not-yet-durable blocks."""
+        out: List[Tuple[int, int]] = []
+        for lvl in self.levels:
+            blocks = lvl.cache.dirty_blocks
+            if not blocks:
+                continue
+            run_lo = prev = blocks[0]
+            for b in blocks[1:]:
+                if b != prev + 1:
+                    out.append((run_lo * self.sector, (prev + 1) * self.sector))
+                    run_lo = b
+                prev = b
+            out.append((run_lo * self.sector, (prev + 1) * self.sector))
+        return out
+
+    def discard_dirty(self) -> List[Tuple[int, int]]:
+        """Simulated crash: every dirty block's unflushed bytes are lost.
+        Drops the blocks from the cache (their contents are no longer
+        trustworthy), counts ``lost_bytes`` per tier, clears flush-policy
+        state, and returns the lost byte extents so the caller can tear the
+        corresponding media ranges."""
+        extents = self.dirty_extents()
+        for lvl in self.levels:
+            blocks = lvl.cache.dirty_blocks
+            lvl.stats.lost_bytes += len(blocks) * self.sector
+            for bid in blocks:
+                lvl.cache.invalidate(bid)
+                if self.flush_policy is not None:
+                    self.flush_policy.drop_block(bid)
+        return extents
+
     # -- reporting -----------------------------------------------------------
     def tier_stats(self) -> List[TierStats]:
         """Per-tier stats, fastest first, backing device last.  Cache
@@ -206,6 +280,7 @@ class TieredStore:
             s.hits = lvl.cache.hits
             s.misses = lvl.cache.misses
             s.evictions = lvl.cache.evictions
+            s.dirty_bytes = lvl.cache.dirty_bytes
             out.append(s.snapshot())
         out.append(self.backing_stats.snapshot())
         return out
@@ -319,6 +394,39 @@ class _OffsetBatch:
         return self._batch.at(self.base + int(base))
 
 
+class WriteBatch:
+    """Handle for one append/ingest operation's writes.  Mirrors
+    :class:`ReadBatch`: bytes land on the simulated disk synchronously (the
+    data plane), accounting and durability are decided when the batch closes
+    — the scheduler coalesces the write extents per phase and hands them to
+    the store's :class:`~repro.store.FlushPolicy` (write-through dispatch or
+    dirty absorption; no policy attached behaves as write-through)."""
+
+    def __init__(self, scheduler: "IOScheduler", label: str = "write"):
+        self.scheduler = scheduler
+        self.label = label
+        self.ops: List[Tuple[int, int, int]] = []
+        self._closed = False
+
+    def write(self, offset: int, data, phase: int = 0) -> None:
+        if self._closed:
+            raise RuntimeError("write on a closed WriteBatch")
+        offset = int(offset)
+        self.scheduler.store.disk.write(offset, data)
+        self.ops.append((offset, len(data), phase))
+
+    def close(self) -> None:
+        if not self._closed:
+            self._closed = True
+            self.scheduler._finish_write(self)
+
+    def __enter__(self) -> "WriteBatch":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+
 class IOScheduler:
     """Accepts whole read batches, coalesces per phase, dispatches through
     the tiered store, and keeps the legacy logical-trace accounting."""
@@ -336,11 +444,32 @@ class IOScheduler:
         self.readahead = readahead or None
         self.workload = WorkloadStats()
         self.ops: List[Tuple[int, int, int]] = []
+        self.write_ops: List[Tuple[int, int, int]] = []
         self._useful = 0
         self.n_batches = 0
+        self.n_write_batches = 0
 
     def batch(self, label: str = "io", prefetch: bool = False) -> ReadBatch:
         return ReadBatch(self, label, prefetch=prefetch)
+
+    def write_batch(self, label: str = "write") -> WriteBatch:
+        return WriteBatch(self, label)
+
+    def _finish_write(self, batch: WriteBatch) -> None:
+        self.write_ops.extend(batch.ops)
+        self.n_write_batches += 1
+        extents = merge_phase_extents(batch.ops, gap=0)
+        policy = self.store.flush_policy
+        if policy is None:
+            # unattached stores behave write-through: durable at batch close
+            for phase in sorted(extents):
+                for lo, hi in extents[phase]:
+                    self.store.dispatch_write_extent(lo, hi, phase)
+        else:
+            policy.absorb(self.store, extents)
+        self.store.end_batch()
+        if policy is not None:
+            policy.on_batch_end(self.store)
 
     def _finish(self, batch: ReadBatch) -> None:
         self.ops.extend(batch.ops)
@@ -376,11 +505,20 @@ class IOScheduler:
         # each batch is its own queue drain: later batches pay their own
         # dependency round trips even though phase numbers restart at 0
         self.store.end_batch()
+        # the flush deadline is measured in batches; tick it for read batches
+        # too so dirty data ages out under read-heavy mixes
+        if self.store.flush_policy is not None:
+            self.store.flush_policy.on_batch_end(self.store)
 
     # -- accounting ----------------------------------------------------------
     def stats(self, coalesce_gap: int = 0) -> IOStats:
-        """Logical-trace stats, bit-identical to the legacy ``IOTracker``."""
+        """Logical-trace stats, bit-identical to the legacy ``IOTracker``.
+        Reads only — the write trace is :meth:`write_stats`."""
         return trace_stats(self.ops, self._useful, coalesce_gap)
+
+    def write_stats(self, coalesce_gap: int = 0) -> IOStats:
+        """Logical *write* trace (ingest side), same accounting shape."""
+        return trace_stats(self.write_ops, 0, coalesce_gap)
 
     def tier_stats(self) -> List[TierStats]:
         return self.store.tier_stats()
@@ -392,8 +530,10 @@ class IOScheduler:
 
     def reset(self) -> None:
         self.ops = []
+        self.write_ops = []
         self._useful = 0
         self.n_batches = 0
+        self.n_write_batches = 0
         self.store.reset_stats()
         self.workload.reset()
         if self.readahead is not None:

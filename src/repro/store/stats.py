@@ -5,6 +5,14 @@ Every tier (the backing device and each cache level) carries one
 device actually serves), block-granular cache hit/miss/eviction counters, and
 per-phase op counts so queue-depth-limited round trips can be priced.
 
+The write path (PR 5) adds the ingest-side counters: ``write_iops`` /
+``bytes_written`` are dispatched device writes (absorbed dirty extents on a
+cache tier, write-through or flush extents on the backing tier);
+``flush_iops`` / ``flush_bytes`` are the subset issued by the flusher;
+``dirty_bytes`` is the tier's resident not-yet-durable footprint (folded in
+from the cache at query time); ``lost_bytes`` counts dirty bytes a simulated
+crash discarded — the durability side of the write-back latency trade.
+
 This replaces the ad-hoc accounting that used to live in benchmark call
 sites: ``model_time`` here is the same first-order device model as
 :func:`repro.core.io_sim.model_time`, extended with a queue-depth term —
@@ -41,6 +49,12 @@ class TierStats:
     evictions: int = 0       # blocks evicted from this tier's cache
     prefetch_iops: int = 0   # subset of n_iops issued by readahead
     prefetch_bytes: int = 0  # subset of bytes_read issued by readahead
+    write_iops: int = 0      # dispatched device write requests
+    bytes_written: int = 0   # sector-aligned bytes written to this tier
+    flush_iops: int = 0      # subset of write_iops issued by the flusher
+    flush_bytes: int = 0     # subset of bytes_written issued by the flusher
+    dirty_bytes: int = 0     # resident dirty bytes (folded in at query time)
+    lost_bytes: int = 0      # dirty bytes discarded by a simulated crash
     max_phase: int = 0       # deepest dependency phase seen (+1)
     phase_ops: Dict[int, int] = dataclasses.field(default_factory=dict)
     batch_phases: List[Dict[int, int]] = dataclasses.field(default_factory=list)
@@ -59,6 +73,19 @@ class TierStats:
             self.prefetch_iops += 1
             self.prefetch_bytes += int(nbytes)
 
+    def add_write_op(self, nbytes: int, phase: int, flush: bool = False) -> None:
+        """One dispatched device *write* (an absorbed dirty extent on a cache
+        tier, a write-through or flush extent on the backing tier).  Writes
+        share the per-phase op buckets with reads, so a drain's round-trip
+        pricing covers both directions of traffic."""
+        self.write_iops += 1
+        self.bytes_written += int(nbytes)
+        self.phase_ops[int(phase)] = self.phase_ops.get(int(phase), 0) + 1
+        self.max_phase = max(self.max_phase, int(phase) + 1)
+        if flush:
+            self.flush_iops += 1
+            self.flush_bytes += int(nbytes)
+
     def end_batch(self) -> None:
         """Close the open batch: its phases become one archived queue drain."""
         if self.phase_ops:
@@ -68,13 +95,17 @@ class TierStats:
     def model_time(self, dev: DeviceModel, queue_depth: int = 256) -> float:
         """Price this tier's dispatched trace on ``dev``: throughput-limited
         term plus queue-depth-limited dependency round trips, one drain per
-        (batch, phase)."""
-        if self.n_iops == 0:
+        (batch, phase).  Reads and writes share the device's throughput and
+        queue (first-order full-duplex-less model, matching the paper's
+        Fig-1 single-direction measurements)."""
+        total_ops = self.n_iops + self.write_iops
+        if total_ops == 0:
             return 0.0
-        avg = max(self.bytes_read / self.n_iops, 1.0)
+        total_bytes = self.bytes_read + self.bytes_written
+        avg = max(total_bytes / total_ops, 1.0)
         eff = max(avg, dev.min_read)
         iops_limit = min(dev.iops_4k, dev.seq_bw / eff)
-        t = max(self.n_iops / iops_limit, self.bytes_read / dev.seq_bw)
+        t = max(total_ops / iops_limit, total_bytes / dev.seq_bw)
         qd = max(1, queue_depth)
         for phases in self.batch_phases + [self.phase_ops]:
             for ops in phases.values():
@@ -92,6 +123,9 @@ class TierStats:
         self.n_iops = self.bytes_read = 0
         self.hits = self.misses = self.evictions = 0
         self.prefetch_iops = self.prefetch_bytes = 0
+        self.write_iops = self.bytes_written = 0
+        self.flush_iops = self.flush_bytes = 0
+        self.dirty_bytes = self.lost_bytes = 0
         self.max_phase = 0
         self.phase_ops = {}
         self.batch_phases = []

@@ -1,0 +1,244 @@
+"""Dataset ingest path: appendable versioned datasets, the flush-then-commit
+crash-safety fence, compaction, and write-back vs write-through accounting."""
+
+import numpy as np
+import pytest
+
+from repro.core import arrays as A, types as T
+from repro.core.file import WriteOptions, write_table
+from repro.dataset import DatasetReader, DatasetWriter, write_fragments
+from repro.store import FlushPolicy, SimulatedCrash, TieredStore
+
+
+def _ints(lo, n):
+    return {"c": A.PrimitiveArray.build(
+        np.arange(lo, lo + n, dtype=np.int64), nullable=False)}
+
+
+def _mixed(lo, n):
+    ints = A.PrimitiveArray.build(
+        np.arange(lo, lo + n, dtype=np.int64),
+        validity=(np.arange(lo, lo + n) % 7 != 0))
+    strs = A.from_pylist(
+        [None if i % 5 == 0 else f"s{lo + i}" for i in range(n)], T.Utf8(True))
+    return {"i": ints, "s": strs}
+
+
+# ---------------------------------------------------------------------------
+# append + versioning
+# ---------------------------------------------------------------------------
+
+
+def test_append_then_read_every_version():
+    """A dataset appended to N times is readable at every manifest version,
+    and each version sees exactly the rows committed by then."""
+    w = DatasetWriter(opts=WriteOptions("lance"))
+    sizes = [50, 80, 30, 120]
+    for k, n in enumerate(sizes):
+        m = w.append(_ints(sum(sizes[:k]), n))
+        assert m.version == k + 1
+    assert w.version == len(sizes)
+    for v in range(1, len(sizes) + 1):
+        r = w.reader(v)
+        want = sum(sizes[:v])
+        assert r.n_rows == want
+        assert A.to_pylist(r.scan("c")) == list(range(want))
+        rows = np.array([0, want - 1, want // 2, 0])
+        assert A.to_pylist(r.take("c", rows)) == rows.tolist()
+    with pytest.raises(IndexError):  # old versions cannot see new rows
+        w.reader(1).take("c", np.array([sizes[0]]))
+
+
+def test_append_matches_single_file_reader():
+    """Appended fragments must decode exactly like one file holding the same
+    rows (messy rows: unsorted, duplicated, crossing every boundary)."""
+    w = DatasetWriter(opts=WriteOptions("lance"))
+    n = 600
+    for lo in range(0, n, 200):
+        w.append(_mixed(lo, 200))
+    from repro.core.file import FileReader
+
+    single = FileReader(write_table(_mixed(0, n), WriteOptions("lance")))
+    rng = np.random.default_rng(0)
+    rows = np.concatenate([rng.integers(0, n, 100),
+                           [0, n - 1, 199, 200, 201, 0]])
+    for col in ("i", "s"):
+        assert A.to_pylist(w.take(col, rows)) == \
+            A.to_pylist(single.take(col, rows))
+
+
+def test_writer_seeds_from_existing_files():
+    files = write_fragments(_ints(0, 300), 3, WriteOptions("lance"))
+    w = DatasetWriter(files=files)
+    assert w.version == 1 and w.n_rows == 300
+    assert A.to_pylist(w.take("c", np.array([0, 150, 299]))) == [0, 150, 299]
+    ds = DatasetReader(files)  # same data through the read-only path
+    assert A.to_pylist(ds.scan("c")) == A.to_pylist(w.scan("c"))
+
+
+def test_append_rejects_schema_mismatch():
+    w = DatasetWriter()
+    w.append(_ints(0, 10))
+    with pytest.raises(ValueError):
+        w.append({"other": A.PrimitiveArray.build(
+            np.arange(5, dtype=np.int64), nullable=False)})
+    with pytest.raises(ValueError):
+        w.reader(2)
+    with pytest.raises(ValueError):
+        DatasetWriter().reader()
+
+
+def test_uncommitted_rows_are_invisible():
+    w = DatasetWriter()
+    w.append(_ints(0, 40))
+    w.append(_ints(40, 40), commit=False)
+    assert w.n_rows == 40 and w.version == 1
+    with pytest.raises(IndexError):
+        w.take("c", np.array([40]))
+    m = w.commit()
+    assert m.version == 2 and w.n_rows == 80
+    assert A.to_pylist(w.take("c", np.array([79]))) == [79]
+    # commit with nothing staged does not mint an empty version
+    assert w.commit().version == 2
+
+
+# ---------------------------------------------------------------------------
+# crash consistency (flush-then-commit fence)
+# ---------------------------------------------------------------------------
+
+
+def test_crash_discards_pending_keeps_committed():
+    w = DatasetWriter(flush="write-back")
+    w.append(_ints(0, 100))
+    w.append(_ints(100, 60), commit=False)
+    assert w.dirty_bytes > 0
+    torn = w.simulate_crash()
+    assert torn > 0
+    assert w.version == 1 and w.n_rows == 100
+    assert A.to_pylist(w.scan("c")) == list(range(100))
+    # per-tier accounting recorded the loss
+    assert w.tier_stats()[0].lost_bytes > 0
+    # the writer keeps working after the crash
+    w.append(_ints(100, 50))
+    assert w.n_rows == 150 and w.version == 2
+    assert A.to_pylist(w.take("c", np.array([149, 0]))) == [149, 0]
+
+
+def test_crash_before_first_commit_leaves_empty_dataset():
+    w = DatasetWriter(flush="write-back")
+    w.append(_ints(0, 30), commit=False)
+    w.simulate_crash()
+    assert w.version == 0 and w.n_rows == 0
+    with pytest.raises(ValueError):
+        w.reader()
+    w.append(_ints(0, 10))  # schema slate is clean again
+    assert w.n_rows == 10
+
+
+def test_interrupted_flush_never_corrupts_committed_version():
+    """A commit whose flush dies mid-way must not mint the new version, and
+    the previous version must read back intact after the crash."""
+    w = DatasetWriter(flush=FlushPolicy("flush-on-evict"))
+    w.append(_ints(0, 200))
+    want_v1 = list(range(200))
+    w.append(_ints(200, 200), commit=False)
+    # contiguous appends flush as one extent; die before it is dispatched
+    w.flush_policy.fail_after = 0
+    with pytest.raises(SimulatedCrash):
+        w.commit()
+    w.flush_policy.fail_after = None
+    w.simulate_crash()
+    assert w.version == 1
+    assert A.to_pylist(w.scan("c")) == want_v1
+    assert A.to_pylist(w.reader(1).take("c", np.array([199, 0]))) == [199, 0]
+
+
+def test_commit_fence_makes_bytes_durable_before_manifest():
+    """After a successful commit nothing is dirty — the manifest can never
+    reference bytes that a crash could still tear."""
+    w = DatasetWriter(flush="write-back")
+    for lo in range(0, 300, 100):
+        w.append(_ints(lo, 100))
+        assert w.dirty_bytes == 0  # every committed version is fully durable
+        assert w.simulate_crash() == 0  # crashing now loses nothing
+        assert w.n_rows == lo + 100
+
+
+# ---------------------------------------------------------------------------
+# compaction
+# ---------------------------------------------------------------------------
+
+
+def test_compact_merges_small_fragments():
+    w = DatasetWriter(opts=WriteOptions("lance"))
+    for lo in range(0, 500, 50):  # 10 small fragments
+        w.append(_mixed(lo, 50))
+    v_before = w.version
+    before_i = A.to_pylist(w.scan("i"))
+    m = w.compact(max_rows=250)
+    assert m.version == v_before + 1
+    assert len(m.fragments) == 2  # 10 x 50 rows -> 2 x 250 rows
+    assert m.n_rows == 500
+    assert A.to_pylist(w.scan("i")) == before_i
+    rng = np.random.default_rng(1)
+    rows = rng.integers(0, 500, 64)
+    assert A.to_pylist(w.take("s", rows)) == \
+        [A.to_pylist(_mixed(0, 500)["s"])[i] for i in rows]
+    # time travel: pre-compaction versions still read the old fragments
+    assert w.reader(3).n_rows == 150
+    assert A.to_pylist(w.reader(3).scan("i")) == before_i[:150]
+    # nothing small enough to merge: no new version
+    assert w.compact(max_rows=100).version == m.version
+
+
+def test_compact_requires_rows_and_commits_pending():
+    w = DatasetWriter()
+    with pytest.raises(ValueError):
+        w.compact(0)
+    with pytest.raises(ValueError):
+        w.compact(10)
+    w.append(_ints(0, 20), commit=False)
+    w.append(_ints(20, 20), commit=False)
+    m = w.compact(max_rows=100)  # auto-commits the pending appends first
+    assert w.n_rows == 40 and len(m.fragments) == 1
+    assert A.to_pylist(w.scan("c")) == list(range(40))
+
+
+# ---------------------------------------------------------------------------
+# write-back vs write-through over the shared store
+# ---------------------------------------------------------------------------
+
+
+def test_write_back_batches_backing_writes():
+    """Same appends, same commits: write-back must reach the backing device
+    with fewer write IOPS (batched at the commit fence) than write-through
+    (one dispatch per append), with identical total manifest state."""
+    def ingest(policy):
+        w = DatasetWriter(
+            store=lambda d: TieredStore.cached(d, cache_bytes=8 << 20),
+            flush=policy)
+        for i in range(6):
+            w.append(_ints(i * 50, 50), commit=(i % 3 == 2))
+        return w
+
+    wt, wb = ingest("write-through"), ingest("write-back")
+    assert wt.n_rows == wb.n_rows == 300
+    s3_wt = {s.name: s for s in wt.tier_stats()}["s3"]
+    s3_wb = {s.name: s for s in wb.tier_stats()}["s3"]
+    assert s3_wb.write_iops < s3_wt.write_iops
+    assert s3_wb.flush_iops == s3_wb.write_iops  # all via the flusher
+    assert s3_wt.flush_iops == 0
+    assert A.to_pylist(wt.scan("c")) == A.to_pylist(wb.scan("c"))
+
+
+def test_ingested_rows_are_nvme_warm():
+    """Appended blocks are resident (dirty or write-through-filled): a take
+    of freshly ingested rows must not touch S3."""
+    for policy in ("write-through", "write-back"):
+        w = DatasetWriter(flush=policy)
+        w.append(_ints(0, 400))
+        w.reset_io()
+        w.take("c", np.arange(0, 400, 7))
+        tiers = {s.name: s for s in w.tier_stats()}
+        assert tiers["s3"].n_iops == 0, policy
+        assert tiers["nvme_970evo"].hit_rate == 1.0, policy

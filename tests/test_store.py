@@ -1,5 +1,6 @@
-"""Tiered storage subsystem: block cache, batched scheduler, readahead, and
-the end-to-end tiered read path through FileReader."""
+"""Tiered storage subsystem: block cache, batched scheduler, readahead, the
+end-to-end tiered read path through FileReader, and the write path (dirty
+blocks, flush policies, durability accounting)."""
 
 import numpy as np
 import pytest
@@ -9,8 +10,10 @@ from repro.core.file import FileReader, WriteOptions, write_table
 from repro.core.io_sim import NVME, S3, Disk, IOTracker
 from repro.store import (
     BlockCache,
+    FlushPolicy,
     IOScheduler,
     SequentialReadahead,
+    SimulatedCrash,
     TieredStore,
     WorkloadStats,
     make_store,
@@ -344,6 +347,234 @@ def test_batch_rejects_use_after_close():
     with pytest.raises(RuntimeError):
         io.read(0, 16)
     assert sched.stats().n_iops == 1
+
+
+# ---------------------------------------------------------------------------
+# write path: dirty blocks, flush policies, durability accounting
+# ---------------------------------------------------------------------------
+
+
+def _wb_store(disk, mode="write-back", cache_blocks=16, **kw):
+    store = TieredStore.cached(disk, cache_bytes=cache_blocks * 4096)
+    store.set_flush_policy(FlushPolicy(mode, **kw))
+    return store
+
+
+def test_cache_dirty_state_and_force_insert():
+    c = BlockCache(4 * 4096, admission="second_touch")
+    c.mark_dirty(7)          # bypasses the admission filter
+    assert 7 in c and c.is_dirty(7)
+    assert c.dirty_bytes == 4096 and c.dirty_blocks == [7]
+    c.clean(7)
+    assert not c.is_dirty(7) and 7 in c  # residency survives the flush
+    assert c.dirty_bytes == 0
+
+
+def test_cache_invalidate_reuses_slot_without_eviction():
+    c = BlockCache(2 * 4096, policy="clock")
+    c.admit(0)
+    c.admit(1)
+    assert c.invalidate(0) and 0 not in c and len(c) == 1
+    assert not c.invalidate(0)  # already gone
+    c.admit(2)                  # must reuse the tombstoned slot
+    assert len(c) == 2 and c.evictions == 0
+    lru = BlockCache(2 * 4096, policy="lru")
+    lru.admit(5)
+    assert lru.invalidate(5) and 5 not in lru and lru.evictions == 0
+
+
+def test_write_back_dirty_accounting_invariants():
+    """The core dirty-byte invariants: absorbed bytes become dirty on the
+    cache tier (no backing traffic), flushing moves exactly those bytes to
+    the backing tier as flush writes, and dirty_bytes returns to zero."""
+    disk = Disk(np.zeros(64 * 4096, np.uint8))
+    store = _wb_store(disk)
+    sched = IOScheduler(store)
+    with sched.write_batch("append:0") as wb:
+        wb.write(0, b"x" * 10_000)          # 3 sectors
+    nvme, s3 = store.tier_stats()
+    assert nvme.write_iops == 1 and nvme.bytes_written == 3 * 4096
+    assert nvme.dirty_bytes == 3 * 4096
+    assert s3.write_iops == 0               # nothing durable yet
+    assert store.dirty_extents() == [(0, 3 * 4096)]
+    flushed = store.flush_all()
+    assert flushed == 3
+    nvme, s3 = store.tier_stats()
+    assert nvme.dirty_bytes == 0
+    assert s3.write_iops == 1 and s3.flush_iops == 1   # one contiguous run
+    assert s3.bytes_written == s3.flush_bytes == 3 * 4096
+    assert sched.write_stats().n_iops == 1
+    assert sched.write_stats().bytes_read == 10_000    # logical write trace
+
+
+def test_write_through_is_immediately_durable():
+    disk = Disk(np.zeros(64 * 4096, np.uint8))
+    store = _wb_store(disk, mode="write-through")
+    sched = IOScheduler(store)
+    with sched.write_batch() as wb:
+        wb.write(4096, b"y" * 4096)
+    nvme, s3 = store.tier_stats()
+    assert s3.write_iops == 1 and s3.flush_iops == 0
+    assert nvme.dirty_bytes == 0 and store.dirty_extents() == []
+    # the written block was admitted clean: the next read is NVMe-warm
+    with sched.batch("take:c") as io:
+        io.read(4096, 100)
+    assert store.levels[0].cache.hits == 1
+    assert store.tier_stats()[1].n_iops == 0  # reads: no S3 traffic
+
+
+def test_write_through_fill_bypasses_admission_filter():
+    """Regression: the write-through fill must force-insert — under
+    second_touch (or auto flipped to it) a plain admit() only ghosts the
+    block and the writer's own fresh bytes would cold-miss to S3."""
+    disk = Disk(np.zeros(64 * 4096, np.uint8))
+    store = TieredStore.cached(disk, admission="second_touch")
+    store.set_flush_policy(FlushPolicy("write-through"))
+    sched = IOScheduler(store)
+    with sched.write_batch() as wb:
+        wb.write(0, b"w" * 4096)
+    assert 0 in store.levels[0].cache     # resident despite second_touch
+    with sched.batch("take:c") as io:
+        io.read(0, 100)
+    assert store.levels[0].cache.hits == 1
+    assert store.tier_stats()[1].n_iops == 0  # no S3 read for fresh bytes
+
+
+def test_unattached_store_defaults_to_write_through():
+    disk = Disk(np.zeros(16 * 4096, np.uint8))
+    store = TieredStore.cached(disk)  # no flush policy attached
+    sched = IOScheduler(store)
+    with sched.write_batch() as wb:
+        wb.write(0, b"z" * 4096)
+    assert store.tier_stats()[1].write_iops == 1
+    assert store.dirty_extents() == []
+
+
+def test_flush_on_evict_writes_back_dirty_victim():
+    disk = Disk(np.zeros(64 * 4096, np.uint8))
+    store = _wb_store(disk, mode="flush-on-evict", cache_blocks=2)
+    sched = IOScheduler(store)
+    with sched.write_batch() as wb:
+        wb.write(0, b"a" * (3 * 4096))  # 3 dirty blocks into a 2-block cache
+    nvme, s3 = store.tier_stats()
+    assert s3.flush_iops == 1           # the evicted victim was written back
+    assert nvme.dirty_bytes == 2 * 4096
+    assert nvme.evictions == 1
+
+
+def test_write_back_high_watermark_flushes_down():
+    disk = Disk(np.zeros(256 * 4096, np.uint8))
+    store = _wb_store(disk, cache_blocks=16, high_watermark=0.5,
+                      low_watermark=0.25, deadline_batches=1000)
+    sched = IOScheduler(store)
+    with sched.write_batch() as wb:     # 10 of 16 blocks dirty: > 0.5
+        wb.write(0, b"b" * (10 * 4096))
+    cache = store.levels[0].cache
+    assert cache.dirty_bytes <= int(0.25 * 16 * 4096) + 4096
+    assert store.tier_stats()[1].flush_iops >= 1
+    assert store.flush_policy.n_flush_events >= 1
+
+
+def test_write_back_deadline_flushes_aged_blocks():
+    disk = Disk(np.zeros(64 * 4096, np.uint8))
+    store = _wb_store(disk, deadline_batches=2)
+    sched = IOScheduler(store)
+    with sched.write_batch() as wb:
+        wb.write(0, b"c" * 4096)
+    assert store.levels[0].cache.dirty_bytes == 4096
+    with sched.batch("take:c") as io:   # read batches tick the deadline too
+        io.read(8 * 4096, 64)
+    assert store.tier_stats()[1].flush_iops == 1
+    assert store.levels[0].cache.dirty_bytes == 0
+
+
+def test_discard_dirty_counts_lost_bytes():
+    disk = Disk(np.zeros(64 * 4096, np.uint8))
+    store = _wb_store(disk)
+    sched = IOScheduler(store)
+    with sched.write_batch() as wb:
+        wb.write(0, b"d" * (2 * 4096))
+        wb.write(8 * 4096, b"d" * 4096)
+    lost = store.discard_dirty()
+    assert lost == [(0, 2 * 4096), (8 * 4096, 9 * 4096)]
+    nvme, s3 = store.tier_stats()
+    assert nvme.lost_bytes == 3 * 4096
+    assert nvme.dirty_bytes == 0 and s3.write_iops == 0
+    # the discarded blocks are gone from the cache, not 'warm garbage'
+    assert len(store.levels[0].cache) == 0
+
+
+def test_flush_fault_injection_is_a_clean_prefix():
+    """An interrupted flush must be a prefix: extents dispatched before the
+    crash are durable (clean), the rest stay dirty — never half-flushed
+    accounting."""
+    disk = Disk(np.zeros(64 * 4096, np.uint8))
+    store = _wb_store(disk)
+    sched = IOScheduler(store)
+    with sched.write_batch() as wb:
+        wb.write(0, b"e" * 4096)            # run 1
+        wb.write(8 * 4096, b"e" * 4096)     # run 2 (disjoint)
+    store.flush_policy.fail_after = 1
+    with pytest.raises(SimulatedCrash):
+        store.flush_all()
+    store.flush_policy.fail_after = None
+    cache = store.levels[0].cache
+    assert not cache.is_dirty(0)            # first extent made it
+    assert cache.is_dirty(8)                # second did not
+    assert store.tier_stats()[1].flush_iops == 1
+
+
+def test_model_time_prices_writes():
+    """Write traffic must show up in the modelled wall time (the queue-depth
+    drain term prices the flush round trip on the backing device)."""
+    disk = Disk(np.zeros(64 * 4096, np.uint8))
+    store = _wb_store(disk)
+    sched = IOScheduler(store)
+    t0 = sched.model_time()
+    with sched.write_batch() as wb:
+        wb.write(0, b"f" * (4 * 4096))
+    t_dirty = sched.model_time()
+    assert t_dirty > t0                     # NVMe absorption is priced
+    store.flush_all()
+    assert sched.model_time() > t_dirty + 0.9 * S3.latency  # S3 drain priced
+
+
+def test_write_batch_rejects_use_after_close():
+    disk = Disk(np.zeros(16 * 4096, np.uint8))
+    sched = IOScheduler(TieredStore.flat(disk))
+    with sched.write_batch() as wb:
+        wb.write(0, b"g" * 16)
+    with pytest.raises(RuntimeError):
+        wb.write(0, b"g")
+    assert sched.n_write_batches == 1
+    # reads and writes are separate logical traces
+    assert sched.stats().n_iops == 0
+    assert sched.write_stats().n_iops == 1
+
+
+def test_flush_policy_validation():
+    with pytest.raises(ValueError):
+        FlushPolicy("write-sideways")
+    with pytest.raises(ValueError):
+        FlushPolicy(high_watermark=0.0)
+    with pytest.raises(ValueError):
+        FlushPolicy(low_watermark=0.9, high_watermark=0.5)
+    with pytest.raises(ValueError):
+        FlushPolicy(deadline_batches=0)
+
+
+def test_disk_write_grow_zero():
+    disk = Disk(np.zeros(8, np.uint8))
+    disk.write(2, b"\x05\x06")
+    assert disk.read(0, 5).tolist() == [0, 0, 5, 6, 0]
+    assert disk.grow(8) == 16
+    assert disk.read(2, 2).tolist() == [5, 6]  # old bytes survive the grow
+    disk.zero(2, 4)
+    assert disk.read(2, 2).tolist() == [0, 0]
+    with pytest.raises(ValueError):
+        disk.write(15, b"ab")
+    with pytest.raises(ValueError):
+        disk.grow(-1)
 
 
 def test_retriever_tiered():

@@ -1,0 +1,52 @@
+#!/usr/bin/env python
+"""Docs link check: every relative markdown link must resolve to a real file.
+
+  python tools/check_links.py README.md docs/ARCHITECTURE.md ...
+
+External links (http/https/mailto) and pure anchors are skipped; anchors on
+relative links are checked against the target file's existence only.  Exits
+non-zero listing every broken link (the CI docs gate).
+"""
+
+import os
+import re
+import sys
+
+LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+
+
+def check(path: str) -> list:
+    broken = []
+    base = os.path.dirname(os.path.abspath(path))
+    with open(path, encoding="utf-8") as f:
+        for lineno, line in enumerate(f, 1):
+            for target in LINK.findall(line):
+                if target.startswith(("http://", "https://", "mailto:", "#")):
+                    continue
+                rel = target.split("#", 1)[0]
+                if not rel:
+                    continue
+                if not os.path.exists(os.path.join(base, rel)):
+                    broken.append(f"{path}:{lineno}: broken link -> {target}")
+    return broken
+
+
+def main(argv) -> int:
+    if not argv:
+        print("usage: check_links.py FILE.md [FILE.md ...]", file=sys.stderr)
+        return 2
+    broken = []
+    for path in argv:
+        if not os.path.exists(path):
+            broken.append(f"{path}: file not found")
+            continue
+        broken.extend(check(path))
+    for b in broken:
+        print(b)
+    if not broken:
+        print(f"ok: all relative links resolve in {len(argv)} file(s)")
+    return 1 if broken else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))
