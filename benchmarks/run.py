@@ -29,6 +29,7 @@ into a live versioned dataset (``BENCH_ingest.json``).
 from __future__ import annotations
 
 import json
+import subprocess
 import sys
 import time
 
@@ -40,6 +41,7 @@ from repro.core import arrays as A, types as T
 from repro.core.file import FileReader, WriteOptions, write_table
 from repro.core.io_sim import NVME, S3, model_time
 from repro.data import synth
+from repro.obs import Tracer, attribute
 
 ROWS = {"scalar": 200_000, "string": 100_000, "scalar-list": 50_000,
         "string-list": 30_000, "vector": 4_000, "vector-list": 1_500,
@@ -48,14 +50,42 @@ TAKE_N = 256  # one paper 'take' op
 
 STORE_SPEC = "flat"  # set by --store; every benchmark reader is built on it
 SMOKE = False  # set by --smoke; tiny row counts for CI
+TRACER = None  # set by --trace PATH; threaded through every reader
+TRACE_PATH = None
 
 
 def _reader(file_bytes, **kw) -> FileReader:
-    return FileReader(file_bytes, store=STORE_SPEC, **kw)
+    return FileReader(file_bytes, store=STORE_SPEC, tracer=TRACER, **kw)
 
 
 def _emit(name: str, us: float, derived: str = ""):
     print(f"{name},{us:.2f},{derived}")
+
+
+def _git_sha():
+    try:
+        return subprocess.run(
+            ["git", "rev-parse", "--short", "HEAD"], capture_output=True,
+            text=True, timeout=10).stdout.strip() or None
+    except OSError:
+        return None
+
+
+def _run_meta() -> dict:
+    """Run provenance stamped into every BENCH_*.json: without it the perf
+    trajectory across PRs is a pile of unlabelled numbers."""
+    return {"git_sha": _git_sha(), "store": STORE_SPEC, "smoke": SMOKE,
+            "traced": TRACER is not None,
+            "timestamp": time.strftime("%Y-%m-%dT%H:%M:%SZ", time.gmtime())}
+
+
+def _dump_json(path: str, results: dict) -> None:
+    """The single bench artifact write site: stamps run metadata and refuses
+    NaN/Infinity (``allow_nan=False`` — non-standard JSON tokens used to
+    leak in through empty-cache hit rates)."""
+    results.setdefault("meta", {})["run"] = _run_meta()
+    with open(path, "w") as f:
+        json.dump(results, f, indent=1, sort_keys=True, allow_nan=False)
 
 
 def _take_bench(arr, opts, n_rows, repeats=3):
@@ -439,9 +469,72 @@ def take_decode():
             _emit(f"take_decode/{name}/{k}", dt * 1e6,
                   f"rows_per_s={k / max(dt, t_io):.0f};iops={st.n_iops}")
         fr.drop_caches()
-    with open("BENCH_take.json", "w") as f:
-        json.dump(results, f, indent=1, sort_keys=True)
+    results["serving_latency"] = _serving_latency_cell(mb)
+    results["pallas_fallback_probe"] = _pallas_fallback_probe(rng)
+    _dump_json("BENCH_take.json", results)
     _emit("take_decode/written", 0.0, "path=BENCH_take.json")
+
+
+def _serving_latency_cell(arr) -> dict:
+    """Per-request latency attribution over a stream of small takes against
+    the tiered store: every queue drain's modelled cost is decomposed onto
+    the rows it served (repro.obs.attrib), giving the p50/p99/p999 a serving
+    SLO actually cares about — the mean hides the cold-tier tail entirely.
+    Deterministic (counted traces x device constants), so bench_gate can
+    diff the percentiles exactly."""
+    n_req, rows_per_req = (32, 16) if SMOKE else (256, 32)
+    rng3 = np.random.default_rng(11)
+    fr = FileReader(write_table({"c": arr}, WriteOptions("lance-miniblock")),
+                    store="tiered", tracer=TRACER)
+    n = len(arr)
+    t0 = time.perf_counter()
+    for _ in range(n_req):
+        fr.take("c", rng3.integers(0, n, rows_per_req))
+    dt = time.perf_counter() - t0
+    att = attribute(fr.store, queue_depth=fr.scheduler.queue_depth)
+    # the acceptance invariant: attributed per-tier sums reproduce each
+    # tier's model_time to float exactness (residual is reported, not hidden)
+    residual = 0.0
+    sums = att.tier_sums()
+    devices = [lvl.device for lvl in fr.store.levels] + [fr.store.backing]
+    for stats, dev in zip(fr.store.tier_stats(), devices):
+        mt = stats.model_time(dev, fr.scheduler.queue_depth)
+        if mt > 0:
+            residual = max(residual, abs(sums.get(stats.name, 0.0) - mt) / mt)
+    # each take declared len(rows) logical requests, so the attributed
+    # per-request latency is already per-row
+    pct = att.percentiles("take:c") or {}
+    per_row = {k: round(v * 1e6, 4) for k, v in pct.items() if k != "count"}
+    cell = {"n_takes": n_req, "rows_per_take": rows_per_req, "store": "tiered",
+            "per_row_us": per_row, "n_attributed_requests": pct.get("count"),
+            "attribution_residual_rel": residual,
+            "model_total_s": round(att.total, 6),
+            "cpu_wall_s": round(dt, 6)}
+    _emit("take_decode/serving_latency", dt * 1e6,
+          f"p50_us={per_row.get('p50')};p99_us={per_row.get('p99')};"
+          f"p999_us={per_row.get('p999')};residual={residual:.2e}")
+    return cell
+
+
+def _pallas_fallback_probe(rng) -> dict:
+    """Force the kernel route off the Pallas path (float values are VPU-only
+    in the mini-block gather kernel) and report the structured fallback
+    reasons the tracer counted.  Runs against the session tracer when
+    --trace is set so the exported Chrome trace carries the instant events;
+    otherwise a local tracer keeps the probe self-contained."""
+    tr = TRACER if TRACER is not None else Tracer()
+    n = 4_096
+    arr = A.PrimitiveArray.build(rng.standard_normal(n).astype(np.float32))
+    fr = FileReader(write_table({"c": arr}, WriteOptions("lance-miniblock")),
+                    store=STORE_SPEC, decode="pallas", tracer=tr)
+    fr.take("c", rng.integers(0, n, 64))
+    reasons = tr.metrics.counter_values("decode.fallback")
+    n_events = sum(1 for e in tr.events
+                   if e.get("name") == "pallas_fallback")
+    cell = {"reasons": reasons, "n_events": n_events}
+    _emit("take_decode/pallas_fallback_probe", 0.0,
+          f"n_events={n_events};reasons={len(reasons)}")
+    return cell
 
 
 def _var_utf8(rng, n: int) -> A.VarBinaryArray:
@@ -606,8 +699,7 @@ def decode_bench():
                 "(_decode_entries_walk) timed on the same fetched spans",
     }
     assert sp >= floor, f"row-parallel decode must be >={floor}x the walk, got {sp}x"
-    with open("BENCH_decode.json", "w") as f:
-        json.dump(results, f, indent=1, sort_keys=True)
+    _dump_json("BENCH_decode.json", results)
     _emit("decode/written", 0.0, "path=BENCH_decode.json")
 
 
@@ -668,7 +760,8 @@ def dataset_take():
 
     # shared: the whole dataset behind one cache + scheduler
     shared = DatasetReader(
-        files, store=lambda d: TieredStore.cached(d, cache_bytes=budget))
+        files, store=lambda d: TieredStore.cached(d, cache_bytes=budget),
+        tracer=TRACER)
     shared_res = {f"pass{i + 1}": one_pass(
         lambda rows: shared.take("c", rows), [shared], pass_rows[i])
         for i in range(2)}
@@ -705,8 +798,7 @@ def dataset_take():
             - shared_res["pass2"]["s3_iops"],
         },
     }
-    with open("BENCH_dataset.json", "w") as f:
-        json.dump(results, f, indent=1, sort_keys=True)
+    _dump_json("BENCH_dataset.json", results)
     for kind, res in [("shared", shared_res), ("per_file", per_file_res)]:
         for p, cell in res.items():
             _emit(f"dataset/{kind}/{p}", cell["cpu_s"] * 1e6,
@@ -751,7 +843,7 @@ def ingest_bench():
         rng = np.random.default_rng(0)  # same draws for every config
         w = DatasetWriter(
             store=lambda d: TieredStore.cached(d, cache_bytes=budget),
-            flush=policy, opts=WriteOptions("lance-fullzip"))
+            flush=policy, opts=WriteOptions("lance-fullzip"), tracer=TRACER)
         n_ops = n_total
         t0 = time.perf_counter()
         for i in range(n_appends):
@@ -810,8 +902,7 @@ def ingest_bench():
           "path=BENCH_ingest.json")
     assert wb["rows_per_s"] > wt["rows_per_s"], \
         "write-back must beat write-through on mixed append/take throughput"
-    with open("BENCH_ingest.json", "w") as f:
-        json.dump(results, f, indent=1, sort_keys=True)
+    _dump_json("BENCH_ingest.json", results)
     _emit("ingest/written", 0.0, "path=BENCH_ingest.json")
 
 
@@ -878,8 +969,18 @@ ALL = [fig1_device_model, fig10_parquet_random_access,
        dataset_take, ingest_bench, kernel_bench, loader_bench]
 
 
+def _bench_names():
+    """Every name a positional arg may use: full function names plus their
+    leading-word tags (``take`` selects ``take_decode``)."""
+    names = set()
+    for fn in ALL:
+        names.add(fn.__name__)
+        names.add(fn.__name__.split("_")[0])
+    return names
+
+
 def _parse_args(argv):
-    global STORE_SPEC, SMOKE
+    global STORE_SPEC, SMOKE, TRACER, TRACE_PATH
     want = set()
     it = iter(argv)
     for a in it:
@@ -889,14 +990,34 @@ def _parse_args(argv):
                 raise SystemExit("--store requires a value (flat|tiered|flat-s3|hot)")
         elif a.startswith("--store="):
             STORE_SPEC = a.split("=", 1)[1]
+        elif a == "--trace":
+            TRACE_PATH = next(it, None)
+            if TRACE_PATH is None:
+                raise SystemExit("--trace requires an output path")
+        elif a.startswith("--trace="):
+            TRACE_PATH = a.split("=", 1)[1]
         elif a == "--smoke":
             SMOKE = True
+        elif a == "--list":
+            for fn in ALL:
+                print(f"{fn.__name__.split('_')[0]:12s} {fn.__name__}")
+            raise SystemExit(0)
         elif a.startswith("-"):
             raise SystemExit(f"unknown option {a}")
         else:
             want.add(a)
     if STORE_SPEC not in ("flat", "tiered", "flat-s3", "hot"):
         raise SystemExit(f"--store must be flat|tiered|flat-s3|hot, got {STORE_SPEC}")
+    # a typo'd benchmark name used to select nothing and exit 0 — a CI run
+    # that silently measured nothing looked green
+    unknown = want - _bench_names()
+    if unknown:
+        avail = ", ".join(sorted(fn.__name__ for fn in ALL))
+        raise SystemExit(
+            f"unknown benchmark(s): {', '.join(sorted(unknown))}\n"
+            f"available: {avail}  (or their first-word tags; see --list)")
+    if TRACE_PATH is not None:
+        TRACER = Tracer()
     return want
 
 
@@ -908,6 +1029,9 @@ def main() -> None:
         if want and tag not in want and fn.__name__ not in want:
             continue
         fn()
+    if TRACER is not None:
+        n = TRACER.export(TRACE_PATH)
+        _emit("trace/written", 0.0, f"path={TRACE_PATH};events={n}")
 
 
 if __name__ == "__main__":

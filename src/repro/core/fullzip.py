@@ -497,6 +497,13 @@ class FullZipReader(ColumnReader):
                 return self._take_fixed_pallas(data, n_unique, stride, inv)
             rep, defs, vals = self._decode_fixed(data)
         else:
+            if self.decode == "pallas":
+                # the rep-indexed path decodes variable-stride entries on the
+                # host frontier; the fused gather kernel needs fixed strides
+                tr = getattr(io, "tracer", None)
+                if tr is not None and tr.enabled:
+                    tr.fallback("fullzip", "variable-stride",
+                                n_rows=int(n_unique))
             R = m["R"]
             # one IOP per row covers both adjacent index entries (start & end)
             idx, _ = io.read_many(

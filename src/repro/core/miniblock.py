@@ -349,7 +349,8 @@ class MiniBlockReader(ColumnReader):
         raws = [data[doffs[i]: doffs[i + 1]] for i in range(len(needed))]
 
         # decode each chunk exactly once (numpy or batched pallas)
-        decoded = self._decode_chunks(needed, raws)
+        decoded = self._decode_chunks(needed, raws,
+                                      tracer=getattr(io, "tracer", None))
         lens = np.array([self.meta["chunks"][c]["n_entries"] for c in needed],
                         dtype=np.int64)
         reps = [d[0] for d in decoded]
@@ -388,14 +389,16 @@ class MiniBlockReader(ColumnReader):
         return reorder_leaf_rows(dec, inv)  # fan out to request order
 
     # ------------------------------------------------------------------
-    def _decode_chunks(self, chunk_ids, raws) -> List[tuple]:
+    def _decode_chunks(self, chunk_ids, raws, tracer=None) -> List[tuple]:
         """Decode chunks ``chunk_ids`` (raw payloads in ``raws``) exactly
         once each.  Under ``decode='pallas'``, integer chunks (bit-packed or
         FoR byte-packed values; flat, nested or fixed-size-list; any
         rep/def level width) are batch-decoded by one ``pallas_call``; the
-        rest fall back to the numpy path per chunk."""
+        rest fall back to the numpy path per chunk.  ``tracer`` (the IO
+        path's, via the batch handle) receives a structured fallback-reason
+        event for every chunk that routes back to numpy."""
         if self.decode == "pallas":
-            routed = self._decode_chunks_pallas(chunk_ids, raws)
+            routed = self._decode_chunks_pallas(chunk_ids, raws, tracer)
             if routed is not None:
                 return routed
         return [self._decode_chunk(c, raw) for c, raw in zip(chunk_ids, raws)]
@@ -407,6 +410,13 @@ class MiniBlockReader(ColumnReader):
         lists of integers, with any (column-constant) rep/def level widths.
         Per-chunk value codecs are checked in :meth:`_chunk_kernel_params`.
         """
+        return self._pallas_ineligible_reason() is None
+
+    def _pallas_ineligible_reason(self) -> Optional[str]:
+        """Column-level fallback reason (None = eligible).  The slugs are the
+        stable vocabulary the ROADMAP's "close the fallback shapes" item
+        tracks: ``variable-width-leaf`` (utf8/binary/list offsets),
+        ``float-values``, ``non-integer-values``, ``tile-over-vmem``."""
         lt = self.proto.leaf_type
         if isinstance(lt, T.Primitive):
             vpe = 1
@@ -415,8 +425,14 @@ class MiniBlockReader(ColumnReader):
             vpe = lt.size
             kind = np.dtype(lt.child.dtype).kind
         else:
-            return False
-        return kind in "iu" and MAX_CHUNK_VALUES * vpe <= self._PALLAS_MAX_TILE_VALUES
+            return "variable-width-leaf"
+        if kind == "f":
+            return "float-values"
+        if kind not in "iu":
+            return "non-integer-values"
+        if MAX_CHUNK_VALUES * vpe > self._PALLAS_MAX_TILE_VALUES:
+            return "tile-over-vmem"
+        return None
 
     @staticmethod
     def _chunk_kernel_params(bufmeta: Dict) -> Optional[tuple]:
@@ -439,8 +455,29 @@ class MiniBlockReader(ColumnReader):
             return (bits, ref)
         return None
 
-    def _decode_chunks_pallas(self, chunk_ids, raws) -> Optional[List[tuple]]:
-        if not self._pallas_eligible():
+    @staticmethod
+    def _chunk_fallback_reason(bufmeta: Dict) -> str:
+        """Why :meth:`_chunk_kernel_params` rejected this chunk's value
+        codec (only called when it did)."""
+        codec = bufmeta.get("codec")
+        if codec == "bitpack":
+            return ">31-bit"
+        if codec == "bytepack":
+            if bufmeta.get("ref") is None:
+                return "float-bytes"
+            if 8 * bufmeta["width"] > 31:
+                return ">31-bit"
+            return "ref-overflow"
+        return f"opaque-codec:{codec}"
+
+    def _decode_chunks_pallas(self, chunk_ids, raws,
+                              tracer=None) -> Optional[List[tuple]]:
+        note = tracer is not None and tracer.enabled
+        col_reason = self._pallas_ineligible_reason()
+        if col_reason is not None:
+            if note:
+                tracer.fallback("miniblock", col_reason,
+                                n_chunks=len(chunk_ids))
             return None
         from ..kernels import ops  # lazy: keep numpy-only readers jax-free
 
@@ -455,6 +492,14 @@ class MiniBlockReader(ColumnReader):
         # metadata-only eligibility check first: chunks are parsed at most
         # once, and an all-ineligible batch costs no parse work at all
         kp = [self._chunk_kernel_params(cm["bufmeta"][vbi]) for cm in metas]
+        if note:
+            reasons: Dict[str, int] = {}
+            for cm, p in zip(metas, kp):
+                if p is None:
+                    r = self._chunk_fallback_reason(cm["bufmeta"][vbi])
+                    reasons[r] = reasons.get(r, 0) + 1
+            for r in sorted(reasons):
+                tracer.fallback("miniblock", r, n_chunks=reasons[r])
         if not any(p is not None for p in kp):
             return None
         sel = [i for i, p in enumerate(kp) if p is not None]
@@ -523,7 +568,8 @@ class MiniBlockReader(ColumnReader):
             raw[offs[ci]: offs[ci] + self.meta["chunks"][ci]["words"] * 8]
             for ci in range(n_chunks)
         ]
-        decoded = self._decode_chunks(np.arange(n_chunks), raws)
+        decoded = self._decode_chunks(np.arange(n_chunks), raws,
+                                      tracer=getattr(io, "tracer", None))
         reps = [d[0] for d in decoded]
         dfs = [d[1] for d in decoded]
         vals = [d[2] for d in decoded]

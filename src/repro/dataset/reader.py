@@ -52,12 +52,14 @@ class DatasetReader:
 
     def __init__(self, files: Sequence[bytes], store=None,
                  queue_depth: int = 256, readahead="auto",
-                 decode: Optional[str] = None, dict_cached: bool = False):
+                 decode: Optional[str] = None, dict_cached: bool = False,
+                 tracer=None):
         from ..store import IOScheduler, make_store
 
         manifest, disk = build_dataset_disk(files)
         scheduler = IOScheduler(make_store(store, disk),
-                                queue_depth=queue_depth, readahead=readahead)
+                                queue_depth=queue_depth, readahead=readahead,
+                                tracer=tracer)
         self._bind(manifest, disk, scheduler, decode=decode,
                    dict_cached=dict_cached)
 
@@ -83,6 +85,7 @@ class DatasetReader:
         self.disk = disk
         self.store = scheduler.store
         self.scheduler = scheduler
+        self.tracer = scheduler.tracer
         self.fragments: List[FileReader] = readers if readers is not None else [
             FileReader(DiskView(self.disk, f.base, f.nbytes),
                        scheduler=self.scheduler, base=f.base,
@@ -124,24 +127,33 @@ class DatasetReader:
         inv = np.empty(len(perm), dtype=np.int64)
         inv[perm] = np.arange(len(perm), dtype=np.int64)
         frag_ids = np.unique(fi)
-        with self.scheduler.batch(f"take:{name}") as io:
-            parts = [self.fragments[f].take_leaves(name, local[fi == f], io)
-                     for f in frag_ids]
-        if col["kind"] in ("arrow", "packed"):
-            return A.concat(parts).take(inv)
-        n_leaves = len(parts[0])
-        leaves = [
-            reorder_leaf_rows(concat_leaves([p[k] for p in parts]), inv)
-            for k in range(n_leaves)
-        ]
-        return unshred(leaves, type_from_dict(col["type"]))
+        with self.tracer.span(f"dataset.take:{name}", cat="reader",
+                              n_rows=len(rows), n_fragments=len(frag_ids)):
+            with self.scheduler.batch(f"take:{name}") as io:
+                # the global rows are the logical requests this drain's
+                # modeled cost is attributed over (repro.obs.attrib)
+                io.note_requests(len(rows))
+                parts = [
+                    self.fragments[f].take_leaves(name, local[fi == f], io)
+                    for f in frag_ids
+                ]
+            if col["kind"] in ("arrow", "packed"):
+                return A.concat(parts).take(inv)
+            n_leaves = len(parts[0])
+            leaves = [
+                reorder_leaf_rows(concat_leaves([p[k] for p in parts]), inv)
+                for k in range(n_leaves)
+            ]
+            return unshred(leaves, type_from_dict(col["type"]))
 
     def scan(self, name: str, io_chunk: int = 8 << 20) -> A.Array:
         """Full-column scan across all fragments, in global row order."""
-        with self.scheduler.batch(f"scan:{name}", prefetch=True) as io:
-            parts = [fr.scan_into(name, io, io_chunk=io_chunk)
-                     for fr in self.fragments]
-        return A.concat(parts)
+        with self.tracer.span(f"dataset.scan:{name}", cat="reader",
+                              n_fragments=len(self.fragments)):
+            with self.scheduler.batch(f"scan:{name}", prefetch=True) as io:
+                parts = [fr.scan_into(name, io, io_chunk=io_chunk)
+                         for fr in self.fragments]
+            return A.concat(parts)
 
     # -- accounting ----------------------------------------------------------
     def io_stats(self, coalesce_gap: int = 0):

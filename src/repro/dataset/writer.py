@@ -69,7 +69,8 @@ class DatasetWriter:
     def __init__(self, files: Sequence[bytes] = (), store="tiered",
                  flush="write-back", opts: Optional[WriteOptions] = None,
                  queue_depth: int = 256, readahead="auto",
-                 decode: Optional[str] = None, dict_cached: bool = False):
+                 decode: Optional[str] = None, dict_cached: bool = False,
+                 tracer=None):
         self.opts = opts or WriteOptions()
         self.disk = Disk(np.zeros(0, np.uint8))
         self.store = make_store(store, self.disk)
@@ -77,7 +78,8 @@ class DatasetWriter:
             flush = FlushPolicy(flush)
         self.store.set_flush_policy(flush)
         self.scheduler = IOScheduler(self.store, queue_depth=queue_depth,
-                                     readahead=readahead)
+                                     readahead=readahead, tracer=tracer)
+        self.tracer = self.scheduler.tracer
         self._decode = decode
         self._dict_cached = dict_cached
         self._columns: Optional[List[Dict]] = None
@@ -129,8 +131,10 @@ class DatasetWriter:
         self.disk.grow(base + len(fb) - len(self.disk))
         fid = self._next_id
         self._next_id += 1
-        with self.scheduler.write_batch(f"{label}:{fid}") as wb:
-            wb.write(base, fb, phase=0)
+        with self.tracer.span(f"{label}:{fid}", cat="writer",
+                              nbytes=len(fb)):
+            with self.scheduler.write_batch(f"{label}:{fid}") as wb:
+                wb.write(base, fb, phase=0)
         row_start = self.fragments[-1].row_stop if self.fragments else 0
         frag = Fragment(id=fid, base=base, nbytes=len(fb),
                         n_rows=cols[0]["n_rows"] if cols else 0,
@@ -158,17 +162,21 @@ class DatasetWriter:
         version nonexistent — never a torn committed manifest.  Returns the
         committed manifest (the latest one when nothing new was staged, or
         ``None`` for a still-empty dataset)."""
-        self.store.flush_all()  # (1) durability barrier (may SimulatedCrash)
-        if not self.fragments:
-            return None  # empty dataset: nothing to commit
-        if self.versions and not self._pending \
-                and self.versions[-1].fragments == self.fragments:
-            return self.versions[-1]  # nothing new: no empty version
-        m = Manifest(self.fragments, self._columns,
-                     version=len(self.versions) + 1)  # (2) the commit point
-        self.versions.append(m)
-        self._pending = []
-        return m
+        with self.tracer.span("commit", cat="writer",
+                              n_pending=len(self._pending)) as sp:
+            # (1) durability barrier (may SimulatedCrash)
+            self.store.flush_all()
+            if not self.fragments:
+                return None  # empty dataset: nothing to commit
+            if self.versions and not self._pending \
+                    and self.versions[-1].fragments == self.fragments:
+                return self.versions[-1]  # nothing new: no empty version
+            m = Manifest(self.fragments, self._columns,
+                         version=len(self.versions) + 1)  # (2) commit point
+            self.versions.append(m)
+            self._pending = []
+            sp.set(version=m.version)
+            return m
 
     def flush(self) -> int:
         """Manual durability barrier without a commit (staged fragments stay
@@ -228,6 +236,10 @@ class DatasetWriter:
             self.commit()
         if not self.versions:
             raise ValueError("nothing committed yet — append() first")
+        with self.tracer.span("compact", cat="writer", max_rows=max_rows):
+            return self._compact(max_rows)
+
+    def _compact(self, max_rows: int) -> Manifest:
         groups: List[List[Fragment]] = []
         run: List[Fragment] = []
         for f in self.fragments:
@@ -289,6 +301,9 @@ class DatasetWriter:
         commit fence, so a shared boundary block can only lose its
         uncommitted tail.  Returns the number of bytes torn."""
         lost_extents = self.store.discard_dirty()
+        self.tracer.instant(
+            "simulated_crash", cat="writer",
+            lost_extents=len(lost_extents), n_pending=len(self._pending))
         pend = [(f.base, f.base + f.nbytes) for f in self._pending]
         torn = 0
         for lo, hi in lost_extents:

@@ -1,0 +1,31 @@
+"""Observability for the tiered IO stack: tracing, metrics, attribution.
+
+Three pieces, layered below everything else in the package (no ``repro``
+imports at module level, so any layer can depend on ``obs``):
+
+* :mod:`repro.obs.trace` — span :class:`Tracer` with a Chrome/Perfetto
+  trace-event exporter; zero-cost no-op when disabled (:data:`NULL_TRACER`).
+* :mod:`repro.obs.metrics` — :class:`MetricsRegistry` of counters and
+  histograms queryable from tests and the bench harness.
+* :mod:`repro.obs.attrib` — :func:`attribute` decomposes each tier's
+  ``model_time`` onto the logical requests that occupied each queue drain,
+  yielding per-request modeled latencies and p50/p99/p999 summaries.
+"""
+
+from .attrib import Attribution, DrainCost, attribute
+from .metrics import Counter, Histogram, MetricsRegistry, percentile
+from .trace import NULL_SPAN, NULL_TRACER, NullTracer, Tracer
+
+__all__ = [
+    "Attribution",
+    "Counter",
+    "DrainCost",
+    "Histogram",
+    "MetricsRegistry",
+    "NULL_SPAN",
+    "NULL_TRACER",
+    "NullTracer",
+    "Tracer",
+    "attribute",
+    "percentile",
+]

@@ -18,5 +18,5 @@ from .scheduler import (  # noqa: F401
     WriteBatch,
     make_store,
 )
-from .stats import TierStats  # noqa: F401
+from .stats import DrainRecord, TierStats  # noqa: F401
 from .workload import WorkloadStats  # noqa: F401

@@ -116,6 +116,7 @@ class FlushPolicy:
         store.backing_stats.add_write_op(store.sector, phase=0, flush=True)
         self._born.pop(block_id, None)
         self.n_flush_events += 1
+        store.tracer.instant("flush_on_evict", cat="flush", block=block_id)
 
     def on_batch_end(self, store) -> None:
         """Scheduler tick (one per closed read/write batch): age-out dirty
@@ -132,24 +133,30 @@ class FlushPolicy:
         expired = [b for b, t in self._born.items()
                    if self._tick - t >= self.deadline_batches]
         if expired:
-            self.flush(store, expired)
+            self.flush(store, expired, reason="deadline")
         cap = cache.capacity_blocks * cache.block_bytes
         if cache.dirty_bytes > self.high_watermark * cap:
             excess = cache.dirty_bytes - int(self.low_watermark * cap)
             oldest = sorted(self._born, key=self._born.get)
             victims = [b for b in oldest if cache.is_dirty(b)]
-            self.flush(store, victims[: max(excess // cache.block_bytes, 1)])
+            self.flush(store, victims[: max(excess // cache.block_bytes, 1)],
+                       reason="watermark")
 
     # -- flushing -------------------------------------------------------------
-    def flush(self, store, blocks: Sequence[int]) -> int:
+    def flush(self, store, blocks: Sequence[int],
+              reason: str = "barrier") -> int:
         """Write a set of dirty blocks back to the backing device: contiguous
         runs become one sector-aligned backing write op each, dispatched into
-        the store's open drain and closed as one queue drain.  Returns the
-        number of blocks made durable.  ``fail_after`` (fault injection)
-        crashes the flush after that many dispatched extents."""
+        the store's open drain and closed as one queue drain.  ``reason``
+        names the trigger (``deadline``/``watermark``/``barrier``) — it
+        labels the drain record and the trace span, so flush stalls are
+        attributable.  Returns the number of blocks made durable.
+        ``fail_after`` (fault injection) crashes the flush after that many
+        dispatched extents."""
         blocks = sorted(b for b in blocks)
         if not blocks:
             return 0
+        label = f"flush:{reason}"
         cache = store.levels[0].cache if store.levels else None
         sector = store.sector
         runs: List[Tuple[int, int]] = []
@@ -161,19 +168,21 @@ class FlushPolicy:
             prev = b
         runs.append((run_lo, prev + 1))
         done = 0
-        for i, (b0, b1) in enumerate(runs):
-            if self.fail_after is not None and i >= self.fail_after:
-                store.end_batch()
-                raise SimulatedCrash(
-                    f"flush interrupted after {i} of {len(runs)} extents")
-            store.backing_stats.add_write_op((b1 - b0) * sector, phase=0,
-                                             flush=True)
-            for bid in range(b0, b1):
-                if cache is not None:
-                    cache.clean(bid)
-                self._born.pop(bid, None)
-                done += 1
-        store.end_batch()  # a flush is its own queue drain
+        with store.tracer.span(label, cat="flush", n_blocks=len(blocks),
+                               n_runs=len(runs)):
+            for i, (b0, b1) in enumerate(runs):
+                if self.fail_after is not None and i >= self.fail_after:
+                    store.end_batch(label)
+                    raise SimulatedCrash(
+                        f"flush interrupted after {i} of {len(runs)} extents")
+                store.backing_stats.add_write_op((b1 - b0) * sector, phase=0,
+                                                 flush=True)
+                for bid in range(b0, b1):
+                    if cache is not None:
+                        cache.clean(bid)
+                    self._born.pop(bid, None)
+                    done += 1
+            store.end_batch(label)  # a flush is its own queue drain
         self.n_flush_events += 1
         return done
 
@@ -181,7 +190,8 @@ class FlushPolicy:
         """The commit barrier: make every dirty block durable now."""
         if not store.levels:
             return 0
-        return self.flush(store, store.levels[0].cache.dirty_blocks)
+        return self.flush(store, store.levels[0].cache.dirty_blocks,
+                          reason="barrier")
 
     def drop_block(self, block_id: int) -> None:
         """Forget policy state for a discarded (crashed/invalidated) block."""

@@ -39,10 +39,11 @@ from ..core.io_sim import (
     merge_phase_extents,
     trace_stats,
 )
+from ..obs.trace import NULL_TRACER
 from .cache import BlockCache
 from .flush import FlushPolicy
 from .prefetch import SequentialReadahead
-from .stats import TierStats
+from .stats import DrainRecord, TierStats
 from .workload import WorkloadStats
 
 __all__ = ["CacheTier", "TieredStore", "ReadBatch", "WriteBatch",
@@ -83,6 +84,12 @@ class TieredStore:
         self.levels: List[CacheTier] = list(levels)
         self.sector = int(sector)
         self.flush_policy: Optional[FlushPolicy] = None
+        # Observability: drain_log records every completed queue drain (for
+        # per-request attribution, always on — it is pure bookkeeping and
+        # never feeds back into pricing); tracer is the span sink threaded
+        # down from the IOScheduler (NULL_TRACER = disabled, zero-cost).
+        self.drain_log: List[DrainRecord] = []
+        self.tracer = NULL_TRACER
         for lvl in self.levels:
             if lvl.cache.block_bytes != self.sector:
                 raise ValueError("cache block size must equal the store sector")
@@ -192,11 +199,22 @@ class TieredStore:
                 run_blocks += 1
         flush()
 
-    def end_batch(self) -> None:
-        """Archive every tier's open batch as one completed queue drain."""
-        self.backing_stats.end_batch()
-        for lvl in self.levels:
-            lvl.stats.end_batch()
+    def end_batch(self, label: str = "io", n_requests: int = 0) -> None:
+        """Archive every tier's open batch as one completed queue drain and
+        log which (tier, phase) buckets it drained — the substrate
+        :func:`repro.obs.attribute` decomposes ``model_time`` over.
+        ``n_requests`` is the logical request count the batch carried (rows
+        of a ``take``); 0 means "unattributed" (scans, flushes)."""
+        tiers: Dict[int, Tuple[Dict[int, int], Dict[int, int]]] = {}
+        for idx, lvl in enumerate(self.levels):
+            drained = lvl.stats.end_batch()
+            if drained is not None:
+                tiers[idx] = drained
+        drained = self.backing_stats.end_batch()
+        if drained is not None:
+            tiers[len(self.levels)] = drained
+        if tiers:
+            self.drain_log.append(DrainRecord(label, int(n_requests), tiers))
 
     # -- write path ----------------------------------------------------------
     def set_flush_policy(self, policy: Optional[FlushPolicy]) -> None:
@@ -300,6 +318,7 @@ class TieredStore:
         for lvl in self.levels:
             lvl.stats.reset()
             lvl.cache.reset_stats()
+        self.drain_log = []
 
     def drop_caches(self) -> None:
         for lvl in self.levels:
@@ -317,7 +336,14 @@ class ReadBatch:
         self.prefetch = prefetch
         self.ops: List[Tuple[int, int, int]] = []
         self._useful = 0
+        self.n_requests = 0
         self._closed = False
+
+    @property
+    def tracer(self):
+        """The IO path's tracer — encoding readers reach it through the
+        batch handle to emit decode-route (pallas fallback) events."""
+        return self.scheduler.tracer
 
     def read(self, offset: int, size: int, phase: int = 0) -> np.ndarray:
         if self._closed:
@@ -348,6 +374,13 @@ class ReadBatch:
 
     def note_useful(self, nbytes: int) -> None:
         self._useful += int(nbytes)
+
+    def note_requests(self, n: int) -> None:
+        """Declare how many logical requests (rows) this batch serves; the
+        drain's modeled cost is attributed across them
+        (:func:`repro.obs.attribute`).  Purely observational — never feeds
+        back into coalescing or pricing."""
+        self.n_requests += int(n)
 
     def at(self, base: int):
         """A view of this batch translated by ``base`` bytes.
@@ -389,6 +422,13 @@ class _OffsetBatch:
 
     def note_useful(self, nbytes: int) -> None:
         self._batch.note_useful(nbytes)
+
+    def note_requests(self, n: int) -> None:
+        self._batch.note_requests(n)
+
+    @property
+    def tracer(self):
+        return self._batch.tracer
 
     def at(self, base: int):
         return self._batch.at(self.base + int(base))
@@ -436,12 +476,20 @@ class IOScheduler:
         store: TieredStore,
         queue_depth: int = 256,
         readahead: Union[str, None, SequentialReadahead] = "auto",
+        tracer=None,
     ):
         self.store = store
         self.queue_depth = int(queue_depth)
         if readahead == "auto":
             readahead = SequentialReadahead() if store.levels else None
         self.readahead = readahead or None
+        # One tracer per IO path: passing one here threads it through the
+        # store (flush-policy spans) and every reader sharing this
+        # scheduler.  Default is the store's (NULL_TRACER unless set) so
+        # injected-scheduler readers inherit the path's tracer.
+        if tracer is not None:
+            store.tracer = tracer
+        self.tracer = store.tracer
         self.workload = WorkloadStats()
         self.ops: List[Tuple[int, int, int]] = []
         self.write_ops: List[Tuple[int, int, int]] = []
@@ -456,59 +504,107 @@ class IOScheduler:
         return WriteBatch(self, label)
 
     def _finish_write(self, batch: WriteBatch) -> None:
-        self.write_ops.extend(batch.ops)
-        self.n_write_batches += 1
-        extents = merge_phase_extents(batch.ops, gap=0)
-        policy = self.store.flush_policy
-        if policy is None:
-            # unattached stores behave write-through: durable at batch close
-            for phase in sorted(extents):
-                for lo, hi in extents[phase]:
-                    self.store.dispatch_write_extent(lo, hi, phase)
-        else:
-            policy.absorb(self.store, extents)
-        self.store.end_batch()
-        if policy is not None:
-            policy.on_batch_end(self.store)
+        tr = self.tracer
+        with tr.span(f"write:{batch.label}", cat="scheduler",
+                     n_ops=len(batch.ops),
+                     bytes=sum(sz for _, sz, _ in batch.ops)):
+            self.write_ops.extend(batch.ops)
+            self.n_write_batches += 1
+            extents = merge_phase_extents(batch.ops, gap=0)
+            policy = self.store.flush_policy
+            if policy is None:
+                # unattached stores behave write-through: durable at batch
+                # close
+                with tr.span("dispatch:write-through", cat="scheduler"):
+                    for phase in sorted(extents):
+                        for lo, hi in extents[phase]:
+                            self.store.dispatch_write_extent(lo, hi, phase)
+            else:
+                with tr.span("absorb", cat="flush"):
+                    policy.absorb(self.store, extents)
+            self.store.end_batch(batch.label)
+            if policy is not None:
+                policy.on_batch_end(self.store)
+        if tr.enabled:
+            self._sample_counters()
 
     def _finish(self, batch: ReadBatch) -> None:
-        self.ops.extend(batch.ops)
-        self._useful += batch._useful
-        self.n_batches += 1
-        # Admission auto-select: fold this batch into the scan/take mix and
-        # re-point any auto cache level *before* the batch dispatches, so a
-        # scan arriving at a take-warmed cache is already policed.
-        self.workload.note_batch(batch.label, batch.prefetch, len(batch.ops),
-                                 sum(sz for _, sz, _ in batch.ops))
-        policy = self.workload.preferred_admission()
+        tr = self.tracer
+        logical_bytes = sum(sz for _, sz, _ in batch.ops)
+        with tr.span(f"drain:{batch.label}", cat="scheduler",
+                     n_ops=len(batch.ops), bytes=logical_bytes,
+                     n_requests=batch.n_requests, prefetch=batch.prefetch):
+            self.ops.extend(batch.ops)
+            self._useful += batch._useful
+            self.n_batches += 1
+            # Admission auto-select: fold this batch into the scan/take mix
+            # and re-point any auto cache level *before* the batch
+            # dispatches, so a scan arriving at a take-warmed cache is
+            # already policed.
+            self.workload.note_batch(batch.label, batch.prefetch,
+                                     len(batch.ops), logical_bytes)
+            policy = self.workload.preferred_admission()
+            for lvl in self.store.levels:
+                if lvl.cache.admission == "auto":
+                    before = lvl.cache.active_admission
+                    lvl.cache.set_active_admission(policy)
+                    if tr.enabled and lvl.cache.active_admission != before:
+                        tr.instant("admission_flip", cat="cache",
+                                   tier=lvl.stats.name, to=policy,
+                                   flips=lvl.cache.admission_flips)
+            # Readahead watches the *raw request stream in arrival order* —
+            # what a streaming scheduler sees as the reader issues its
+            # chunks — and its fills land in the cache ahead of the demand
+            # drain, so the demand extents below hit the warm tier instead
+            # of the backing one.
+            if (batch.prefetch and self.readahead is not None
+                    and self.store.levels):
+                with tr.span("readahead", cat="scheduler"):
+                    disk_len = len(self.store.disk)
+                    for o, sz, p in batch.ops:
+                        if sz <= 0:
+                            continue
+                        pf = self.readahead.observe(o, o + sz)
+                        if pf is not None:
+                            plo, phi = pf[0], min(pf[1], disk_len)
+                            if phi > plo:
+                                self.store.dispatch_extent(plo, phi, p,
+                                                           prefetch=True)
+            with tr.span("coalesce", cat="scheduler") as csp:
+                extents = merge_phase_extents(batch.ops, gap=0)
+                csp.set(n_phases=len(extents),
+                        n_extents=sum(len(v) for v in extents.values()))
+            for phase in sorted(extents):
+                with tr.span(f"dispatch:p{phase}", cat="scheduler",
+                             n_extents=len(extents[phase])):
+                    for lo, hi in extents[phase]:
+                        self.store.dispatch_extent(lo, hi, phase)
+            # each batch is its own queue drain: later batches pay their own
+            # dependency round trips even though phase numbers restart at 0
+            self.store.end_batch(batch.label, batch.n_requests)
+            # the flush deadline is measured in batches; tick it for read
+            # batches too so dirty data ages out under read-heavy mixes
+            if self.store.flush_policy is not None:
+                self.store.flush_policy.on_batch_end(self.store)
+        if tr.enabled:
+            self._sample_counters()
+
+    def _sample_counters(self) -> None:
+        """One sample per counter track at batch close (traced runs only)."""
+        tr = self.tracer
         for lvl in self.store.levels:
-            if lvl.cache.admission == "auto":
-                lvl.cache.set_active_admission(policy)
-        # Readahead watches the *raw request stream in arrival order* — what
-        # a streaming scheduler sees as the reader issues its chunks — and
-        # its fills land in the cache ahead of the demand drain, so the
-        # demand extents below hit the warm tier instead of the backing one.
-        if batch.prefetch and self.readahead is not None and self.store.levels:
-            disk_len = len(self.store.disk)
-            for o, sz, p in batch.ops:
-                if sz <= 0:
-                    continue
-                pf = self.readahead.observe(o, o + sz)
-                if pf is not None:
-                    plo, phi = pf[0], min(pf[1], disk_len)
-                    if phi > plo:
-                        self.store.dispatch_extent(plo, phi, p, prefetch=True)
-        extents = merge_phase_extents(batch.ops, gap=0)
-        for phase in sorted(extents):
-            for lo, hi in extents[phase]:
-                self.store.dispatch_extent(lo, hi, phase)
-        # each batch is its own queue drain: later batches pay their own
-        # dependency round trips even though phase numbers restart at 0
-        self.store.end_batch()
-        # the flush deadline is measured in batches; tick it for read batches
-        # too so dirty data ages out under read-heavy mixes
-        if self.store.flush_policy is not None:
-            self.store.flush_policy.on_batch_end(self.store)
+            cache = lvl.cache
+            looked = cache.hits + cache.misses
+            tr.counter(f"cache:{lvl.stats.name}", {
+                "hit_rate": cache.hits / looked if looked else 0.0,
+                "dirty_bytes": cache.dirty_bytes,
+                "evictions": cache.evictions,
+            })
+        tr.counter("scheduler", {
+            "n_batches": self.n_batches,
+            "n_write_batches": self.n_write_batches,
+            "drains": len(self.store.drain_log),
+        })
 
     # -- accounting ----------------------------------------------------------
     def stats(self, coalesce_gap: int = 0) -> IOStats:

@@ -24,11 +24,28 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Dict, List
+from typing import Dict, List, Optional, Tuple
 
 from ..core.io_sim import DeviceModel
 
-__all__ = ["TierStats"]
+__all__ = ["TierStats", "DrainRecord"]
+
+
+@dataclasses.dataclass
+class DrainRecord:
+    """One completed queue drain across the whole store.
+
+    Appended by ``TieredStore.end_batch``: ``tiers`` maps tier index
+    (fastest level first, backing device last — the ``tier_stats()`` order)
+    to the ``(phase_ops, phase_bytes)`` buckets that drain archived.
+    ``n_requests`` is the logical request count the batch carried (rows of a
+    ``take``; 0 for scans/flushes) — the denominator per-request latency
+    attribution (:mod:`repro.obs.attrib`) divides each drain's cost by.
+    """
+
+    label: str
+    n_requests: int
+    tiers: Dict[int, Tuple[Dict[int, int], Dict[int, int]]]
 
 
 @dataclasses.dataclass
@@ -57,17 +74,22 @@ class TierStats:
     lost_bytes: int = 0      # dirty bytes discarded by a simulated crash
     max_phase: int = 0       # deepest dependency phase seen (+1)
     phase_ops: Dict[int, int] = dataclasses.field(default_factory=dict)
+    phase_bytes: Dict[int, int] = dataclasses.field(default_factory=dict)
     batch_phases: List[Dict[int, int]] = dataclasses.field(default_factory=list)
 
     @property
-    def hit_rate(self) -> float:
+    def hit_rate(self) -> Optional[float]:
+        """Block-lookup hit rate, or ``None`` before any lookup — never NaN
+        (NaN here used to leak non-standard tokens into BENCH_*.json)."""
         n = self.hits + self.misses
-        return self.hits / n if n else float("nan")
+        return self.hits / n if n else None
 
     def add_op(self, nbytes: int, phase: int, prefetch: bool = False) -> None:
         self.n_iops += 1
         self.bytes_read += int(nbytes)
         self.phase_ops[int(phase)] = self.phase_ops.get(int(phase), 0) + 1
+        self.phase_bytes[int(phase)] = (
+            self.phase_bytes.get(int(phase), 0) + int(nbytes))
         self.max_phase = max(self.max_phase, int(phase) + 1)
         if prefetch:
             self.prefetch_iops += 1
@@ -81,16 +103,25 @@ class TierStats:
         self.write_iops += 1
         self.bytes_written += int(nbytes)
         self.phase_ops[int(phase)] = self.phase_ops.get(int(phase), 0) + 1
+        self.phase_bytes[int(phase)] = (
+            self.phase_bytes.get(int(phase), 0) + int(nbytes))
         self.max_phase = max(self.max_phase, int(phase) + 1)
         if flush:
             self.flush_iops += 1
             self.flush_bytes += int(nbytes)
 
-    def end_batch(self) -> None:
-        """Close the open batch: its phases become one archived queue drain."""
+    def end_batch(self) -> Optional[Tuple[Dict[int, int], Dict[int, int]]]:
+        """Close the open batch: its phases become one archived queue drain.
+        Returns the drained ``(phase_ops, phase_bytes)`` buckets (``None`` if
+        the batch touched nothing on this tier) so the store can log the
+        drain for per-request attribution."""
         if self.phase_ops:
+            drained = (self.phase_ops, self.phase_bytes)
             self.batch_phases.append(self.phase_ops)
             self.phase_ops = {}
+            self.phase_bytes = {}
+            return drained
+        return None
 
     def model_time(self, dev: DeviceModel, queue_depth: int = 256) -> float:
         """Price this tier's dispatched trace on ``dev``: throughput-limited
@@ -116,6 +147,7 @@ class TierStats:
         """Detached copy — safe to hold across a later ``reset()``."""
         return dataclasses.replace(
             self, phase_ops=dict(self.phase_ops),
+            phase_bytes=dict(self.phase_bytes),
             batch_phases=[dict(p) for p in self.batch_phases],
         )
 
@@ -128,4 +160,5 @@ class TierStats:
         self.dirty_bytes = self.lost_bytes = 0
         self.max_phase = 0
         self.phase_ops = {}
+        self.phase_bytes = {}
         self.batch_phases = []

@@ -52,9 +52,11 @@ class WorkloadStats:
 
     # -- decision ------------------------------------------------------------
     @property
-    def scan_fraction(self) -> float:
+    def scan_fraction(self):
+        """Scan share of the logical byte stream, or ``None`` before any
+        batch — never NaN (NaN leaked into BENCH_*.json artifacts)."""
         total = self.scan_bytes + self.take_bytes
-        return self.scan_bytes / total if total else float("nan")
+        return self.scan_bytes / total if total else None
 
     def preferred_admission(self) -> str:
         """``second_touch`` when scans dominate the byte stream, else

@@ -1,0 +1,167 @@
+#!/usr/bin/env python
+"""Benchmark regression gate: diff fresh BENCH_*.json against committed
+baselines and fail (exit 1) on any drift in the *deterministic* metrics.
+
+The simulator's headline numbers are counted, not measured: IOPS, dispatched
+bytes, read amplification, modelled IO times, and the attributed latency
+percentiles are pure functions of (code, seed, device constants).  On equal
+code they reproduce bit-for-bit, so the gate can be strict:
+
+* integers (``n_iops``, ``bytes_read``, tier op counts, ...) must be equal;
+* deterministic floats (``model_io_s``, ``per_row_us`` percentiles, ...)
+  must match to 1e-6 relative (rounding at the artifact write site is the
+  only slack needed);
+* wall-clock and throughput numbers (``rows_per_s``, ``cpu_decode_s``,
+  speedups) are machine noise and are ignored unless ``--rates`` opts in,
+  which checks them only within a loose ``--rate-tol`` band.
+
+Keys present in the baseline but missing from the current artifact are
+failures (a silently dropped metric is a regression of the *benchmark*);
+keys new in the current artifact are fine — they are tomorrow's baseline.
+The ``meta`` subtree (git sha, timestamp, host facts) is provenance, not a
+metric, and is never compared.
+
+Usage::
+
+    python benchmarks/run.py --smoke take decode dataset ingest
+    python tools/bench_gate.py --baseline benchmarks/baselines/smoke
+
+compares every ``BENCH_*.json`` in the baseline dir against its same-named
+sibling in the current directory (override with ``--current``).
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+import sys
+from typing import List
+
+# substrings marking a metric as measured (machine-dependent) rather than
+# counted — skipped unless --rates
+RATE_MARKERS = ("rows_per_s", "per_s", "speedup", "cpu_", "wall", "walk",
+                "tokens", "mtok", "mvals")
+# exact key names that are wall-clock measurements without a marker substring
+RATE_EXACT = frozenset({"scan_s"})
+FLOAT_RTOL = 1e-6
+
+
+def _is_rate_key(key: str) -> bool:
+    k = key.lower()
+    return k in RATE_EXACT or any(m in k for m in RATE_MARKERS)
+
+
+def compare(baseline, current, *, rates: bool = False,
+            rate_tol: float = 0.5, path: str = "") -> List[str]:
+    """Recursive diff; returns human-readable failure lines (empty = pass)."""
+    fails: List[str] = []
+    if isinstance(baseline, dict):
+        if not isinstance(current, dict):
+            return [f"{path}: expected object, got {type(current).__name__}"]
+        for key, bval in baseline.items():
+            if key == "meta":
+                continue
+            sub = f"{path}.{key}" if path else key
+            if key not in current:
+                fails.append(f"{sub}: missing from current artifact")
+                continue
+            fails += compare(bval, current[key], rates=rates,
+                             rate_tol=rate_tol, path=sub)
+        return fails
+    if isinstance(baseline, list):
+        if not isinstance(current, list) or len(current) != len(baseline):
+            return [f"{path}: list shape changed "
+                    f"({len(baseline)} -> {len(current) if isinstance(current, list) else type(current).__name__})"]
+        for i, (b, c) in enumerate(zip(baseline, current)):
+            fails += compare(b, c, rates=rates, rate_tol=rate_tol,
+                             path=f"{path}[{i}]")
+        return fails
+
+    # leaf: classify by the final key segment
+    leaf_key = path.rsplit(".", 1)[-1]
+    if _is_rate_key(leaf_key):
+        if rates and isinstance(baseline, (int, float)) \
+                and isinstance(current, (int, float)) and baseline:
+            rel = abs(current - baseline) / abs(baseline)
+            if rel > rate_tol:
+                fails.append(f"{path}: rate drifted {rel:.1%} "
+                             f"(> {rate_tol:.0%}): {baseline} -> {current}")
+        return fails
+    if isinstance(baseline, bool) or isinstance(current, bool) \
+            or isinstance(baseline, str) or baseline is None:
+        if baseline != current:
+            fails.append(f"{path}: {baseline!r} -> {current!r}")
+        return fails
+    if isinstance(baseline, int) and isinstance(current, int):
+        if baseline != current:
+            fails.append(f"{path}: counted metric changed: "
+                         f"{baseline} -> {current}")
+        return fails
+    if isinstance(baseline, (int, float)) and isinstance(current, (int, float)):
+        denom = max(abs(baseline), abs(current), 1e-12)
+        if abs(current - baseline) / denom > FLOAT_RTOL:
+            fails.append(f"{path}: deterministic float drifted: "
+                         f"{baseline} -> {current}")
+        return fails
+    if baseline != current:
+        fails.append(f"{path}: {baseline!r} -> {current!r}")
+    return fails
+
+
+def gate(baseline_dir: str, current_dir: str, *, rates: bool = False,
+         rate_tol: float = 0.5, names: List[str] | None = None,
+         out=sys.stdout) -> int:
+    """Compare artifacts; print a report; return the process exit code."""
+    if names:
+        base_paths = [os.path.join(baseline_dir, n) for n in names]
+    else:
+        base_paths = sorted(glob.glob(os.path.join(baseline_dir, "BENCH_*.json")))
+    if not base_paths:
+        print(f"bench_gate: no baselines under {baseline_dir}", file=out)
+        return 2
+    n_fail = 0
+    for bp in base_paths:
+        name = os.path.basename(bp)
+        cp = os.path.join(current_dir, name)
+        if not os.path.exists(cp):
+            print(f"FAIL {name}: current artifact missing ({cp})", file=out)
+            n_fail += 1
+            continue
+        with open(bp) as f:
+            base = json.load(f)
+        with open(cp) as f:
+            cur = json.load(f)
+        fails = compare(base, cur, rates=rates, rate_tol=rate_tol)
+        if fails:
+            n_fail += 1
+            print(f"FAIL {name}: {len(fails)} regression(s)", file=out)
+            for line in fails:
+                print(f"  {line}", file=out)
+        else:
+            print(f"OK   {name}", file=out)
+    return 1 if n_fail else 0
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("names", nargs="*",
+                    help="specific BENCH_*.json basenames (default: every "
+                         "baseline in --baseline)")
+    ap.add_argument("--baseline", default="benchmarks/baselines/smoke",
+                    help="directory holding the committed baseline artifacts")
+    ap.add_argument("--current", default=".",
+                    help="directory holding the freshly produced artifacts")
+    ap.add_argument("--rates", action="store_true",
+                    help="also check measured rates (rows_per_s etc.) "
+                         "within --rate-tol")
+    ap.add_argument("--rate-tol", type=float, default=0.5,
+                    help="relative tolerance for --rates (default 0.5)")
+    args = ap.parse_args(argv)
+    return gate(args.baseline, args.current, rates=args.rates,
+                rate_tol=args.rate_tol, names=args.names or None)
+
+
+if __name__ == "__main__":
+    sys.exit(main())
