@@ -906,6 +906,148 @@ def ingest_bench():
     _emit("ingest/written", 0.0, "path=BENCH_ingest.json")
 
 
+def serve_bench():
+    """Multi-tenant serving headline (BENCH_serve.json): Zipf-skewed
+    concurrent takers + a write-back ingest tenant over one shared tiered
+    store, priced by the scheduler's event-loop serving plane.
+
+    The same executed workload (identical classification, cache state and
+    per-tier accounting — both timings are pure overlays on the drain log)
+    is priced under interleaved event-loop dispatch and under the old
+    serial batch-drain; the gate asserts interleaved wins on p99
+    per-request latency.  Tenants carry QoS weights (premium 4x standard)
+    and the ingest tenant's append/flush drains share the device queues
+    with the reads — the flush-vs-concurrent-reads interleaving the
+    event loop exists to fix.  Per-row latency attribution
+    (repro.obs.attribute) runs over the same trace with reads and flushes
+    in flight together; its per-tier residual against model_time is
+    reported, not hidden."""
+    from repro.dataset import DatasetWriter
+    from repro.serve.workload import (TenantSpec, ZipfWorkload, drive,
+                                      tenant_summary)
+    from repro.store import TieredStore
+
+    n_frag = 4 if SMOKE else 8
+    rows_per = 1_000 if SMOKE else 6_000
+    n_requests = 96 if SMOKE else 1_500
+    arrival_rate = 200.0       # requests per virtual second
+    width = 32                 # float32 lanes -> 128 B rows
+    qd = 32                    # shallow queue: concurrency must share rounds
+    n_total = n_frag * rows_per
+    # cache holds ~half the data: the Zipf head goes NVMe-warm, the tail
+    # keeps paying S3 round trips — the serving tail the percentiles see
+    budget = max(int(0.5 * n_total * width * 4), 1 << 18)
+
+    def table(rng, n):
+        vals = rng.standard_normal((n, width)).astype(np.float32)
+        arr = A.FixedSizeListArray(
+            T.FixedSizeList(T.Primitive("float32", nullable=False), width),
+            np.ones(n, bool), vals)
+        return {"c": arr}
+
+    rng = np.random.default_rng(7)
+    seeds = [write_table(table(rng, rows_per), WriteOptions("lance-fullzip"))
+             for _ in range(n_frag)]
+    w = DatasetWriter(
+        files=seeds,
+        store=lambda d: TieredStore.cached(d, cache_bytes=budget),
+        flush="write-back", opts=WriteOptions("lance-fullzip"),
+        queue_depth=qd, tracer=TRACER)
+
+    tenants = [
+        TenantSpec("premium", share=1.0, weight=4.0, rows_per_request=32),
+        TenantSpec("standard", share=2.0, weight=1.0, rows_per_request=32),
+    ]
+    wl = ZipfWorkload(n_rows=w.n_rows, tenants=tenants,
+                      n_requests=n_requests, zipf_s=1.05,
+                      arrival_rate=arrival_rate, seed=3)
+    reqs = wl.generate()
+    rng2 = np.random.default_rng(13)
+    t0 = time.perf_counter()
+    inter, serial = drive(
+        w, "c", reqs, qos=wl.qos(),
+        append_table=lambda: table(rng2, rows_per // 4),
+        append_every=max(n_requests // 8, 1), commit_every=2)
+    dt = time.perf_counter() - t0
+
+    names = [t.name for t in tenants] + ["ingest"]
+    sum_inter = tenant_summary(inter, names)
+    sum_serial = tenant_summary(serial, names)
+    tiers = {s.name: s for s in w.tier_stats()}
+    s3, nvme = tiers["s3"], tiers["nvme_970evo"]
+
+    # attribution exactness with reads and flushes in flight together
+    att = attribute(w.store, queue_depth=qd)
+    residual = 0.0
+    sums = att.tier_sums()
+    devices = [lvl.device for lvl in w.store.levels] + [w.store.backing]
+    for stats, dev in zip(w.tier_stats(), devices):
+        mt = stats.model_time(dev, qd)
+        if mt > 0:
+            residual = max(residual, abs(sums.get(stats.name, 0.0) - mt) / mt)
+    pct = att.percentiles("take:c") or {}
+    per_row_us = {k: round(v * 1e6, 4) for k, v in pct.items()
+                  if k != "count"}
+
+    p99_i = sum_inter["all"]["p99"]
+    p99_s = sum_serial["all"]["p99"]
+    results = {
+        "meta": {"n_fragments": n_frag, "rows_per_fragment": rows_per,
+                 "n_requests": n_requests, "arrival_rate_per_s": arrival_rate,
+                 "queue_depth": qd, "nvme_budget_bytes": budget,
+                 "zipf_s": wl.zipf_s, "smoke": SMOKE,
+                 "cpu_wall_s": round(dt, 6)},
+        "workload": {
+            "n_jobs": len(inter.completions),
+            "n_take_requests": n_requests,
+            "n_flush_drains": sum(
+                1 for c in inter.completions if c.label.startswith("flush:")),
+        },
+        "interleaved_ms": sum_inter,
+        "serial_ms": sum_serial,
+        "tier_occupancy": inter.tiers,
+        "counted": {
+            "s3_iops": s3.n_iops, "s3_bytes_read": s3.bytes_read,
+            "s3_write_iops": s3.write_iops,
+            "s3_rmw_iops": s3.rmw_iops, "s3_rmw_bytes": s3.rmw_bytes,
+            "nvme_iops": nvme.n_iops, "nvme_write_iops": nvme.write_iops,
+            "nvme_hit_rate": round(nvme.hit_rate, 4)
+            if nvme.hits + nvme.misses else None,
+            "logical_read_iops": w.io_stats().n_iops,
+            "logical_read_bytes": w.io_stats().bytes_read,
+            "logical_write_iops": w.write_stats().n_iops,
+        },
+        "attribution": {"per_row_us": per_row_us,
+                        "n_attributed_requests": pct.get("count"),
+                        "residual_rel": residual},
+        "headline": {
+            "gate": "interleaved event-loop p99 < serial batch-drain p99",
+            "p50_interleaved_ms": round(sum_inter["all"]["p50"], 6),
+            "p99_interleaved_ms": round(p99_i, 6),
+            "p999_interleaved_ms": round(sum_inter["all"]["p999"], 6),
+            "p50_serial_ms": round(sum_serial["all"]["p50"], 6),
+            "p99_serial_ms": round(p99_s, 6),
+            "p999_serial_ms": round(sum_serial["all"]["p999"], 6),
+            "p99_speedup_serial_over_interleaved": round(p99_s / p99_i, 3),
+            "p99_premium_ms": round(sum_inter["premium"]["p99"], 6),
+            "p99_standard_ms": round(sum_inter["standard"]["p99"], 6),
+        },
+    }
+    _emit("serve/latency", dt * 1e6,
+          f"p99_interleaved_ms={p99_i:.3f};p99_serial_ms={p99_s:.3f};"
+          f"speedup={p99_s / p99_i:.2f}x;jobs={len(inter.completions)};"
+          f"residual={residual:.2e}")
+    assert p99_i < p99_s, \
+        "event-loop interleaved dispatch must beat serial batch-drain " \
+        f"on p99 per-request latency ({p99_i:.3f} ms vs {p99_s:.3f} ms)"
+    # QoS weights (premium 4x) are reported, not asserted: p99 for either
+    # tenant is dominated by whether its rank-99 request hit a cold S3 row
+    # (one 30 ms round trip), which weights cannot buy off — they only cut
+    # queueing delay under round contention.
+    _dump_json("BENCH_serve.json", results)
+    _emit("serve/written", 0.0, "path=BENCH_serve.json")
+
+
 def kernel_bench():
     """Device decode paths: ref-oracle throughput on CPU + kernel validation
     (interpret mode executes the kernel body; wall-time is not TPU time)."""
@@ -966,7 +1108,7 @@ ALL = [fig1_device_model, fig10_parquet_random_access,
        fig11_encodings_random_access, fig12_fullzip_vs_miniblock,
        fig13_compression, fig14_16_full_scan, fig17_scan_decode_cost,
        fig18_struct_packing, store_tiering, take_decode, decode_bench,
-       dataset_take, ingest_bench, kernel_bench, loader_bench]
+       dataset_take, ingest_bench, serve_bench, kernel_bench, loader_bench]
 
 
 def _bench_names():

@@ -164,8 +164,9 @@ class DatasetWriter:
         ``None`` for a still-empty dataset)."""
         with self.tracer.span("commit", cat="writer",
                               n_pending=len(self._pending)) as sp:
-            # (1) durability barrier (may SimulatedCrash)
-            self.store.flush_all()
+            # (1) durability barrier (may SimulatedCrash); routed through
+            # the scheduler so the flush drains hit the serving plane
+            self.scheduler.flush_barrier()
             if not self.fragments:
                 return None  # empty dataset: nothing to commit
             if self.versions and not self._pending \
@@ -181,7 +182,7 @@ class DatasetWriter:
     def flush(self) -> int:
         """Manual durability barrier without a commit (staged fragments stay
         pending but their bytes stop being at risk)."""
-        return self.store.flush_all()
+        return self.scheduler.flush_barrier()
 
     # -- reading -------------------------------------------------------------
     def _reader_for(self, frag: Fragment) -> FileReader:

@@ -65,13 +65,15 @@ NULL_SPAN = _NullSpan()
 class _Span:
     """One open span; appended to the tracer's event list on exit."""
 
-    __slots__ = ("_tracer", "name", "cat", "args", "_ts")
+    __slots__ = ("_tracer", "name", "cat", "args", "_ts", "tid")
 
-    def __init__(self, tracer: "Tracer", name: str, cat: str, args: Dict):
+    def __init__(self, tracer: "Tracer", name: str, cat: str, args: Dict,
+                 tid: Optional[int] = None):
         self._tracer = tracer
         self.name = name
         self.cat = cat
         self.args = args
+        self.tid = tid
         self._ts = tracer._now_us()
 
     def set(self, **args) -> None:
@@ -86,7 +88,9 @@ class _Span:
         tr.events.append({
             "name": self.name, "cat": self.cat, "ph": "X",
             "ts": self._ts, "dur": tr._now_us() - self._ts,
-            "pid": tr.pid, "tid": tr.tid, "args": self.args,
+            "pid": tr.pid,
+            "tid": self.tid if self.tid is not None else tr.tid,
+            "args": self.args,
         })
         return False
 
@@ -107,18 +111,42 @@ class Tracer:
         self.tid = tid
         self.events: List[Dict] = []
         self.metrics = MetricsRegistry()
+        self._tracks: Dict[str, int] = {}
         self._t0 = time.perf_counter()
 
     def _now_us(self) -> float:
         return (time.perf_counter() - self._t0) * 1e6
 
     # -- event API -----------------------------------------------------------
-    def span(self, name: str, cat: str = "io", **args):
-        """Open a timed span (context manager).  Returns the shared
-        :data:`NULL_SPAN` when disabled — no allocation, no recording."""
+    def span(self, name: str, cat: str = "io", tid: Optional[int] = None,
+             **args):
+        """Open a timed span (context manager).  ``tid`` overrides the
+        tracer's default track — the scheduler uses one track per request so
+        concurrent takers render as separate Perfetto lanes.  Returns the
+        shared :data:`NULL_SPAN` when disabled — no allocation, no
+        recording."""
         if not self.enabled:
             return NULL_SPAN
-        return _Span(self, name, cat, args)
+        return _Span(self, name, cat, args, tid=tid)
+
+    def track(self, key: Optional[str]) -> int:
+        """Intern ``key`` as a stable per-request track id (tid).
+
+        The first time a key is seen a Chrome ``thread_name`` metadata event
+        is emitted so Perfetto labels the lane with the request id; repeat
+        calls return the same tid.  ``None`` (or disabled) falls back to the
+        tracer's default track."""
+        if not self.enabled or key is None:
+            return self.tid
+        tid = self._tracks.get(key)
+        if tid is None:
+            tid = self.tid + 1 + len(self._tracks)
+            self._tracks[key] = tid
+            self.events.append({
+                "name": "thread_name", "ph": "M", "ts": self._now_us(),
+                "pid": self.pid, "tid": tid, "args": {"name": str(key)},
+            })
+        return tid
 
     def instant(self, name: str, cat: str = "event", **args) -> None:
         """A structured point event (thread-scoped instant)."""
@@ -171,6 +199,7 @@ class Tracer:
     def reset(self) -> None:
         self.events = []
         self.metrics = MetricsRegistry()
+        self._tracks = {}
         self._t0 = time.perf_counter()
 
 

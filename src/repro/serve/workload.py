@@ -1,0 +1,158 @@
+"""Multi-tenant Zipf serving workload over the dataset layer.
+
+The "millions of users" shape from the ROADMAP: many concurrent takers with
+Zipf-skewed row popularity (a small hot set absorbs most of the traffic,
+a long cold tail keeps missing) driving ``DatasetReader.take`` through one
+shared tiered store, optionally mixed with an ingest tenant whose appends
+and flush runs compete for the same device queues.
+
+This module only *generates and drives* the workload; the timing comes from
+the scheduler's event-loop serving plane (:mod:`repro.store.evloop`).  The
+driver executes every request inside one :class:`~repro.store.ServiceWindow`
+so the same executed trace can be priced under interleaved event-loop
+dispatch and under the old serial batch-drain, and per-tenant
+p50/p99/p999 latency compared between the two — the serving benchmark's
+headline gate.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from ..store import QoS, ServiceResult, latency_percentiles
+
+__all__ = ["TenantSpec", "ServeRequest", "ZipfWorkload", "drive",
+           "tenant_summary"]
+
+
+@dataclasses.dataclass
+class TenantSpec:
+    """One serving tenant: its share of the request stream and its QoS
+    standing (weight feeds the event loop's weighted-fair round packing,
+    priority its strict classes)."""
+
+    name: str
+    share: float = 1.0
+    weight: float = 1.0
+    priority: int = 0
+    rows_per_request: int = 32
+
+
+@dataclasses.dataclass
+class ServeRequest:
+    """One arrival: a tenant asks for ``rows`` at virtual time ``at``."""
+
+    tenant: str
+    at: float
+    rows: np.ndarray
+
+
+class ZipfWorkload:
+    """Deterministic multi-tenant request generator.
+
+    Row popularity is bounded Zipf over the global row ids: row rank k is
+    drawn with probability proportional to ``1 / k**zipf_s``, so low ids
+    are hot (they share fragments, so the cache's sector granularity gets
+    real spatial locality) and the tail stays cold.  Arrivals are a Poisson
+    process at ``arrival_rate`` requests per virtual second, tenants drawn
+    by their ``share``.  Everything derives from ``seed`` — two instances
+    with equal parameters generate identical request streams, which is what
+    lets the benchmark compare dispatch models on the same workload."""
+
+    def __init__(self, n_rows: int, tenants: Sequence[TenantSpec],
+                 n_requests: int, zipf_s: float = 1.1,
+                 arrival_rate: float = 50.0, seed: int = 0):
+        if n_rows <= 0 or n_requests <= 0:
+            raise ValueError("n_rows and n_requests must be positive")
+        self.n_rows = int(n_rows)
+        self.tenants = list(tenants)
+        self.n_requests = int(n_requests)
+        self.zipf_s = float(zipf_s)
+        self.arrival_rate = float(arrival_rate)
+        self.seed = int(seed)
+        ranks = np.arange(1, self.n_rows + 1, dtype=np.float64)
+        p = ranks ** -self.zipf_s
+        self._popularity = p / p.sum()
+
+    def qos(self, starvation_rounds: int = 16) -> QoS:
+        """The QoS knobs implied by the tenant specs."""
+        return QoS(weights={t.name: t.weight for t in self.tenants},
+                   priority={t.name: t.priority for t in self.tenants},
+                   starvation_rounds=starvation_rounds)
+
+    def generate(self) -> List[ServeRequest]:
+        rng = np.random.default_rng(self.seed)
+        shares = np.array([t.share for t in self.tenants], dtype=np.float64)
+        shares /= shares.sum()
+        who = rng.choice(len(self.tenants), size=self.n_requests, p=shares)
+        gaps = rng.exponential(1.0 / self.arrival_rate, size=self.n_requests)
+        arrivals = np.cumsum(gaps)
+        out: List[ServeRequest] = []
+        for k in range(self.n_requests):
+            spec = self.tenants[int(who[k])]
+            rows = rng.choice(self.n_rows, size=spec.rows_per_request,
+                              p=self._popularity)
+            out.append(ServeRequest(spec.name, float(arrivals[k]),
+                                    np.asarray(rows, dtype=np.int64)))
+        return out
+
+
+def drive(
+    writer,
+    column: str,
+    requests: Sequence[ServeRequest],
+    qos: Optional[QoS] = None,
+    append_table=None,
+    append_every: int = 0,
+    commit_every: int = 4,
+) -> Tuple[ServiceResult, ServiceResult]:
+    """Execute the request stream through ``writer``'s shared scheduler and
+    price it under both dispatch models.
+
+    Every take runs inside ``window.request`` (tenant + arrival tag); with
+    ``append_table`` (a zero-arg callable returning a table) the ``ingest``
+    tenant appends a fragment every ``append_every`` requests, committing
+    every ``commit_every`` appends — so write-back flush runs land inside
+    the window and share the queues with the reads, which is precisely the
+    interleaving the tentpole is about.  Returns ``(interleaved, serial)``
+    results over the *same* executed workload: classification, cache state
+    and accounting are identical, only the dispatch timing differs."""
+    sch = writer.scheduler
+    n_appends = 0
+    with sch.service_window(qos) as win:
+        for i, req in enumerate(requests):
+            with win.request(tenant=req.tenant, at=req.at,
+                             request=f"{req.tenant}/{i}"):
+                writer.take(column, req.rows)
+            if append_table is not None and append_every \
+                    and (i + 1) % append_every == 0:
+                n_appends += 1
+                with win.request(tenant="ingest", at=req.at,
+                                 request=f"ingest/{n_appends}"):
+                    writer.append(append_table(),
+                                  commit=(n_appends % commit_every == 0))
+        interleaved = win.run("interleaved")
+        serial = win.run("serial")
+    return interleaved, serial
+
+
+def tenant_summary(result: ServiceResult, tenants: Sequence[str],
+                   scale: float = 1e3) -> Dict[str, Dict]:
+    """Per-tenant nearest-rank latency summaries (default milliseconds),
+    plus the whole-population row under ``"all"``."""
+    out: Dict[str, Dict] = {}
+    pops = {name: [] for name in tenants}
+    everything = []
+    for c in result.completions:
+        everything.append(c.latency * scale)
+        if c.tenant in pops:
+            pops[c.tenant].append(c.latency * scale)
+    for name in tenants:
+        summary = latency_percentiles(pops[name])
+        if summary is not None:
+            out[name] = summary
+    out["all"] = latency_percentiles(everything)
+    return out

@@ -8,6 +8,16 @@
 # write-back with deadline+watermark / flush-on-evict).
 
 from .cache import BlockCache  # noqa: F401
+from .evloop import (  # noqa: F401
+    EventLoop,
+    Job,
+    JobCompletion,
+    QoS,
+    ServiceResult,
+    ServiceWindow,
+    build_job,
+    latency_percentiles,
+)
 from .flush import FlushPolicy, SimulatedCrash  # noqa: F401
 from .prefetch import SequentialReadahead  # noqa: F401
 from .scheduler import (  # noqa: F401

@@ -1,0 +1,515 @@
+"""Event-loop dispatch simulation over the tiered store's drain log.
+
+The scheduler's accounting model (PR 6) archives every completed queue drain
+as a :class:`~repro.store.stats.DrainRecord`: per tier, per dependency phase,
+the op and byte buckets the drain moved.  Until now those drains were priced
+*serially* — each batch paid its full queue-depth-limited round-trip cost
+before the next batch started, so flushes stalled between read batches and
+concurrent takers queued end to end.  This module replaces that timing model
+with an event-loop simulation while leaving the accounting plane untouched:
+
+* every drain record becomes a :class:`Job` — an ordered chain of per
+  (phase, tier) *units*, each carrying its latency rounds (``ceil(ops/qd)``
+  round trips) and its share of the tier's throughput-pipe time;
+* each tier keeps an **outstanding-request table** bounded by the queue
+  depth: when a tier starts a round it packs up to ``queue_depth`` ops from
+  *all* pending units — read batches from many concurrent requests and
+  ``FlushPolicy`` write runs share the same queue, so round-trip latency
+  amortizes across jobs exactly the way the paper's deep-queue NVMe argument
+  says it should;
+* a **virtual-clock completion heap** orders round completions, pipe drains
+  and job arrivals; completions are naturally *reordered* — a small warm job
+  submitted after a large cold one can finish first;
+* **QoS knobs** (:class:`QoS`): per-tenant weighted queue admission
+  (weighted-fair round packing by served-ops/weight), strict priority
+  classes, and a starvation guard that front-runs any unit that has been
+  overtaken by later-arriving work for ``starvation_rounds`` rounds.
+
+Hard contract — *lone-job degeneration*: a job simulated alone completes in
+exactly its serial-drain price, i.e. the same per-(batch, phase) arithmetic
+as :meth:`TierStats.model_time <repro.store.stats.TierStats.model_time>`
+applied to that one drain.  The per-tier throughput term is split across the
+job's phase units byte-proportionally with exact remainder assignment (the
+same scheme as :func:`repro.obs.attribute`), so the unit chain telescopes
+back to ``tp + sum(ceil(ops/qd) * latency)`` per tier.  With no concurrency
+the event loop *is* the old serial drain; concurrency only shares rounds, it
+never invents bandwidth (the pipe is FCFS and work-conserving).
+
+Nothing here feeds back into pricing or classification: the event loop is a
+timing overlay over drains that already happened, which is what keeps the
+logical trace and the per-tier accounting bit-identical whether or not a
+service window is open.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import heapq
+import math
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from ..core.io_sim import DeviceModel
+from ..obs.metrics import percentile
+from .stats import DrainRecord
+
+__all__ = ["QoS", "Job", "JobCompletion", "ServiceResult", "ServiceWindow",
+           "EventLoop", "build_job", "latency_percentiles"]
+
+
+@dataclasses.dataclass
+class QoS:
+    """Fairness/priority knobs for interleaved round packing.
+
+    ``weights`` biases the weighted-fair share (a tenant with weight 4 gets
+    ~4x the round slots of a weight-1 tenant under contention); ``priority``
+    maps tenants to strict classes (higher served first — a lower class only
+    gets slots the higher classes left free); ``starvation_rounds`` bounds
+    how long strict priority can starve anyone: a unit *overtaken by
+    later-arriving work* for that many rounds jumps the whole order
+    (waiting behind earlier arrivals is ordinary queueing and does not
+    age)."""
+
+    weights: Dict[str, float] = dataclasses.field(default_factory=dict)
+    priority: Dict[str, int] = dataclasses.field(default_factory=dict)
+    default_weight: float = 1.0
+    starvation_rounds: int = 16
+
+    def weight_for(self, tenant: str) -> float:
+        w = float(self.weights.get(tenant, self.default_weight))
+        return w if w > 0.0 else 1e-9
+
+    def priority_for(self, tenant: str) -> int:
+        return int(self.priority.get(tenant, 0))
+
+
+class _Unit:
+    """One (phase, tier) slice of a job: ``ops`` queue slots to win plus a
+    ``pipe`` share of the tier's throughput term."""
+
+    __slots__ = ("job", "tier", "phase", "dev", "ops", "nbytes", "pipe",
+                 "seq", "ops_left", "wait_rounds")
+
+    def __init__(self, job: "Job", tier: int, phase: int, dev: DeviceModel,
+                 ops: int, nbytes: int, pipe: float):
+        self.job = job
+        self.tier = tier
+        self.phase = phase
+        self.dev = dev
+        self.ops = int(ops)
+        self.nbytes = int(nbytes)
+        self.pipe = float(pipe)
+        self.seq = 0          # global arrival order, assigned at run time
+        self.ops_left = 0     # per-run state (reset by EventLoop.run)
+        self.wait_rounds = 0
+
+
+class Job:
+    """One drain record lifted into the event loop: an ordered unit chain
+    (phase-major, fastest tier first within a phase) plus serving metadata."""
+
+    __slots__ = ("label", "tenant", "weight", "request", "n_requests",
+                 "submit", "seq", "units", "_next")
+
+    def __init__(self, label: str, tenant: str = "default",
+                 weight: Optional[float] = None,
+                 request: Optional[str] = None, n_requests: int = 0,
+                 submit: float = 0.0, seq: int = 0):
+        self.label = label
+        self.tenant = tenant
+        self.weight = weight
+        self.request = request
+        self.n_requests = int(n_requests)
+        self.submit = float(submit)
+        self.seq = int(seq)
+        self.units: List[_Unit] = []
+        self._next = 0
+
+    def serial_time(self, queue_depth: int) -> float:
+        """The job's old-world price: every unit strictly sequential —
+        ``sum(ceil(ops/qd) * latency + pipe)`` over the chain, which is
+        exactly ``TierStats.model_time`` restricted to this one drain."""
+        qd = max(1, int(queue_depth))
+        t = 0.0
+        # accumulate per tier in chain order so the float summation order
+        # matches model_time's (tp first, then the phase latency terms)
+        per_tier: Dict[int, Tuple[float, float]] = {}
+        for u in self.units:
+            tp, lat = per_tier.get(u.tier, (0.0, 0.0))
+            per_tier[u.tier] = (tp + u.pipe,
+                                lat + math.ceil(u.ops / qd) * u.dev.latency)
+        for tp, lat in per_tier.values():
+            t += tp + lat
+        return t
+
+
+@dataclasses.dataclass
+class JobCompletion:
+    """One job's completion record on the virtual clock."""
+
+    label: str
+    tenant: str
+    request: Optional[str]
+    n_requests: int
+    submit: float
+    done: float
+
+    @property
+    def latency(self) -> float:
+        return self.done - self.submit
+
+
+def build_job(
+    record: DrainRecord,
+    devices: Sequence[DeviceModel],
+    *,
+    tenant: str = "default",
+    weight: Optional[float] = None,
+    request: Optional[str] = None,
+    submit: float = 0.0,
+    seq: int = 0,
+) -> Job:
+    """Lift one drain record into a :class:`Job`.
+
+    ``devices`` is the store's tier order (fastest level first, backing
+    last) — the same indexing the record's ``tiers`` dict uses.  Per tier,
+    the throughput term is computed with the *identical* arithmetic as
+    ``TierStats.model_time`` over that tier's slice of the drain (average op
+    size clamped to ``min_read``, IOPS- or bandwidth-limited, whichever
+    binds) and then split across the tier's phase units byte-proportionally
+    with the remainder assigned exactly to the last unit, so the per-tier
+    pipe shares sum to the tier's throughput term bit-for-bit."""
+    job = Job(record.label, tenant=tenant, weight=weight, request=request,
+              n_requests=record.n_requests, submit=submit, seq=seq)
+    staged: List[Tuple[int, int, _Unit]] = []
+    for tier in sorted(record.tiers):
+        phase_ops, phase_bytes = record.tiers[tier]
+        dev = devices[tier]
+        total_ops = sum(phase_ops.values())
+        if total_ops == 0:
+            continue
+        total_bytes = sum(phase_bytes.get(p, 0) for p in phase_ops)
+        avg = max(total_bytes / total_ops, 1.0)
+        eff = max(avg, dev.min_read)
+        iops_limit = min(dev.iops_4k, dev.seq_bw / eff)
+        tp = max(total_ops / iops_limit, total_bytes / dev.seq_bw)
+        phases = sorted(phase_ops)
+        assigned = 0.0
+        for k, p in enumerate(phases):
+            nb = phase_bytes.get(p, 0)
+            if k == len(phases) - 1:
+                pipe = tp - assigned  # exact remainder: shares sum to tp
+            elif total_bytes:
+                pipe = tp * (nb / total_bytes)
+                assigned += pipe
+            else:
+                pipe = tp * (phase_ops[p] / total_ops)
+                assigned += pipe
+            staged.append((p, tier, _Unit(job, tier, p, dev,
+                                          phase_ops[p], nb, pipe)))
+    # phase-major chain: phase p on every tier completes before phase p+1
+    # starts (the dependency the phases encode), fastest tier first within a
+    # phase (the classify order).
+    staged.sort(key=lambda t: (t[0], t[1]))
+    job.units = [u for _, _, u in staged]
+    return job
+
+
+@dataclasses.dataclass
+class ServiceResult:
+    """One event-loop (or serial-baseline) run over a set of jobs."""
+
+    mode: str
+    completions: List[JobCompletion]
+    tiers: Dict[str, Dict[str, int]]
+
+    @property
+    def makespan(self) -> float:
+        return max((c.done for c in self.completions), default=0.0)
+
+    def percentiles(self, tenant: Optional[str] = None,
+                    label_prefix: Optional[str] = None) -> Optional[Dict]:
+        """Nearest-rank per-request latency summary (seconds), optionally
+        filtered by tenant and/or drain-label prefix."""
+        lats = [c.latency for c in self.completions
+                if (tenant is None or c.tenant == tenant)
+                and (label_prefix is None or c.label.startswith(label_prefix))]
+        return latency_percentiles(lats)
+
+
+def latency_percentiles(latencies: Sequence[float]) -> Optional[Dict]:
+    """count/mean/p50/p99/p999/max over a latency population (nearest-rank,
+    the same estimator as :mod:`repro.obs.metrics`); ``None`` when empty."""
+    lats = sorted(float(x) for x in latencies)
+    if not lats:
+        return None
+    return {
+        "count": len(lats),
+        "mean": sum(lats) / len(lats),
+        "p50": percentile(lats, 50.0),
+        "p99": percentile(lats, 99.0),
+        "p999": percentile(lats, 99.9),
+        "max": lats[-1],
+    }
+
+
+class _TierState:
+    """Per-tier run state: the outstanding-request table and the FCFS
+    bandwidth pipe."""
+
+    __slots__ = ("dev", "pending", "in_round", "granted", "busy",
+                 "pipe_free", "rounds", "max_outstanding", "served")
+
+    def __init__(self, dev: DeviceModel):
+        self.dev = dev
+        self.pending: List[_Unit] = []
+        self.in_round: List[_Unit] = []
+        self.granted: Dict[int, int] = {}   # unit seq -> ops in this round
+        self.busy = False
+        self.pipe_free = 0.0
+        self.rounds = 0
+        self.max_outstanding = 0
+        self.served: Dict[str, int] = {}    # tenant -> ops served (for WFQ)
+
+
+class EventLoop:
+    """Virtual-clock simulation of interleaved dispatch across the tiers.
+
+    ``run(jobs, mode="interleaved")`` shares each tier's latency rounds
+    across all pending jobs (bounded by the queue depth) and drains bytes
+    through a work-conserving FCFS pipe; ``mode="serial"`` prices the same
+    job list the old way — one batch fully drained before the next starts —
+    which is the baseline the serving benchmark's p99 gate compares against.
+    Both modes are pure functions of (jobs, queue_depth, qos): they mutate
+    no accounting state and can be re-run on the same job list."""
+
+    def __init__(self, devices: Sequence[DeviceModel], queue_depth: int = 256,
+                 qos: Optional[QoS] = None):
+        self.devices = list(devices)
+        self.queue_depth = max(1, int(queue_depth))
+        self.qos = qos or QoS()
+
+    # -- public entry points --------------------------------------------------
+    def run(self, jobs: Sequence[Job], mode: str = "interleaved") -> ServiceResult:
+        if mode == "serial":
+            return self._run_serial(jobs)
+        if mode != "interleaved":
+            raise ValueError(f"unknown event-loop mode {mode!r}")
+        return self._run_interleaved(jobs)
+
+    # -- serial baseline ------------------------------------------------------
+    def _run_serial(self, jobs: Sequence[Job]) -> ServiceResult:
+        """The old drain-the-whole-batch-then-return world: jobs run FIFO in
+        (submit, seq) order, each paying its full serial-drain price."""
+        clock = 0.0
+        completions: List[JobCompletion] = []
+        for job in sorted(jobs, key=lambda j: (j.submit, j.seq)):
+            start = max(clock, job.submit)
+            clock = start + job.serial_time(self.queue_depth)
+            completions.append(JobCompletion(
+                job.label, job.tenant, job.request, job.n_requests,
+                job.submit, clock))
+        return ServiceResult("serial", completions, {})
+
+    # -- interleaved event loop -----------------------------------------------
+    def _run_interleaved(self, jobs: Sequence[Job]) -> ServiceResult:
+        tiers = [_TierState(dev) for dev in self.devices]
+        heap: List[Tuple[float, int, int, object]] = []
+        eseq = 0  # heap tie-break: deterministic FIFO among equal timestamps
+
+        def push(t: float, kind: int, payload) -> None:
+            nonlocal eseq
+            eseq += 1
+            heapq.heappush(heap, (t, kind, eseq, payload))
+
+        useq = 0
+        for job in sorted(jobs, key=lambda j: (j.submit, j.seq)):
+            job._next = 0
+            for u in job.units:
+                useq += 1
+                u.seq = useq
+                u.ops_left = u.ops
+                u.wait_rounds = 0
+            push(job.submit, 0, job)  # kind 0: arrival
+
+        completions: List[JobCompletion] = []
+
+        def activate(unit: _Unit, t: float) -> None:
+            ts = tiers[unit.tier]
+            ts.pending.append(unit)
+            if not ts.busy:
+                start_round(ts, t)
+
+        def order_key(ts: _TierState):
+            qos = self.qos
+
+            def key(u: _Unit):
+                tenant = u.job.tenant
+                w = u.job.weight if u.job.weight is not None \
+                    else qos.weight_for(tenant)
+                starved = 0 if u.wait_rounds >= qos.starvation_rounds else 1
+                return (starved, -qos.priority_for(tenant),
+                        ts.served.get(tenant, 0) / max(w, 1e-9), u.seq)
+            return key
+
+        def start_round(ts: _TierState, t: float) -> None:
+            """Pack the next outstanding window: up to queue_depth ops drawn
+            from all pending units in QoS order."""
+            if not ts.pending:
+                ts.busy = False
+                return
+            order = sorted(ts.pending, key=order_key(ts))
+            slots = self.queue_depth
+            chosen: List[_Unit] = []
+            passed: List[_Unit] = []
+            granted: Dict[int, int] = {}
+            for u in order:
+                if slots <= 0:
+                    passed.append(u)
+                    continue
+                g = min(u.ops_left, slots)
+                granted[u.seq] = g
+                u.ops_left -= g
+                u.wait_rounds = 0
+                slots -= g
+                ts.served[u.job.tenant] = ts.served.get(u.job.tenant, 0) + g
+                chosen.append(u)
+            # aging: a passed-over unit only moves toward the starvation
+            # threshold when *later-arriving* work jumped ahead of it.
+            # Waiting behind earlier arrivals is plain FIFO queueing; being
+            # overtaken is what strict priority classes inflict, and that is
+            # what the guard bounds — under a sustained high-class flood
+            # every victim would otherwise cross the threshold in lockstep
+            # with the flood itself and priority would just re-decide.
+            max_seq = max((u.seq for u in chosen), default=0)
+            for u in passed:
+                if u.seq < max_seq:
+                    u.wait_rounds += 1
+            ts.pending = [u for u in ts.pending if u.seq not in granted]
+            ts.in_round = chosen
+            ts.granted = granted
+            ts.busy = True
+            ts.rounds += 1
+            ts.max_outstanding = max(ts.max_outstanding,
+                                     self.queue_depth - slots)
+            push(t + ts.dev.latency, 1, ts)  # kind 1: round completion
+
+        def finish_round(ts: _TierState, t: float) -> None:
+            for u in ts.in_round:
+                if u.ops_left == 0:
+                    # all this unit's ops have completed their round trips;
+                    # its bytes drain through the FCFS bandwidth pipe
+                    ts.pipe_free = max(ts.pipe_free, t) + u.pipe
+                    push(ts.pipe_free, 2, u)  # kind 2: unit completion
+                else:
+                    ts.pending.append(u)
+            ts.in_round = []
+            ts.granted = {}
+            ts.busy = False
+            if ts.pending:
+                start_round(ts, t)
+
+        def finish_unit(unit: _Unit, t: float) -> None:
+            job = unit.job
+            job._next += 1
+            if job._next < len(job.units):
+                activate(job.units[job._next], t)
+            else:
+                completions.append(JobCompletion(
+                    job.label, job.tenant, job.request, job.n_requests,
+                    job.submit, t))
+
+        while heap:
+            t, kind, _, payload = heapq.heappop(heap)
+            if kind == 0:
+                job = payload
+                if job.units:
+                    activate(job.units[0], t)
+                else:
+                    completions.append(JobCompletion(
+                        job.label, job.tenant, job.request, job.n_requests,
+                        job.submit, t))
+            elif kind == 1:
+                finish_round(payload, t)
+            else:
+                finish_unit(payload, t)
+
+        report = {ts.dev.name: {"rounds": ts.rounds,
+                                "max_outstanding": ts.max_outstanding}
+                  for ts in tiers if ts.rounds}
+        return ServiceResult("interleaved", completions, report)
+
+
+@dataclasses.dataclass
+class _RequestCtx:
+    tenant: str
+    at: Optional[float]
+    weight: Optional[float]
+    request: Optional[str]
+
+
+class ServiceWindow:
+    """Collects the drains of many concurrent requests for one shared
+    event-loop run.
+
+    Opened via ``IOScheduler.service_window()``.  While the window is open,
+    every completed drain (read batches, write batches, and the flush runs
+    they trigger) is lifted into a :class:`Job` instead of advancing the
+    scheduler's immediate virtual clock; :meth:`request` tags the jobs a
+    block of calls produces with a tenant, an arrival time and an optional
+    weight.  ``run("interleaved")`` and ``run("serial")`` then price the
+    *same executed workload* under both dispatch models — cache state and
+    accounting are identical by construction, only the timing differs."""
+
+    def __init__(self, scheduler, qos: Optional[QoS] = None):
+        self.scheduler = scheduler
+        self.qos = qos
+        self.jobs: List[Job] = []
+        self._cur: Optional[_RequestCtx] = None
+        self._arrival = 0.0  # default submit time for untagged drains
+
+    def __enter__(self) -> "ServiceWindow":
+        if self.scheduler._window is not None:
+            raise RuntimeError("service windows do not nest")
+        self.scheduler._window = self
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.scheduler._window = None
+
+    @contextlib.contextmanager
+    def request(self, tenant: str = "default", at: Optional[float] = None,
+                weight: Optional[float] = None,
+                request: Optional[str] = None):
+        """Tag every drain produced inside the block as one tenant request
+        arriving at virtual time ``at`` (defaults to the latest arrival seen,
+        so untimed requests land back to back)."""
+        if at is not None:
+            self._arrival = float(at)
+        prev = self._cur
+        self._cur = _RequestCtx(tenant, self._arrival, weight, request)
+        try:
+            yield
+        finally:
+            self._cur = prev
+
+    def _submit(self, job: Job) -> None:
+        ctx = self._cur
+        if ctx is not None:
+            job.tenant = ctx.tenant
+            job.weight = ctx.weight
+            job.submit = ctx.at if ctx.at is not None else self._arrival
+            if ctx.request is not None:
+                job.request = ctx.request
+        else:
+            job.submit = self._arrival
+        self.jobs.append(job)
+
+    def run(self, mode: str = "interleaved", qos: Optional[QoS] = None,
+            queue_depth: Optional[int] = None) -> ServiceResult:
+        """Price the captured jobs; pure — callable repeatedly, with either
+        mode, without touching scheduler or store state."""
+        loop = EventLoop(self.scheduler._devices(),
+                         queue_depth or self.scheduler.queue_depth,
+                         qos or self.qos)
+        return loop.run(self.jobs, mode=mode)

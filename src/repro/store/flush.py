@@ -96,6 +96,11 @@ class FlushPolicy:
                 if hi <= lo:
                     continue
                 b0, b1 = lo // sector, (hi + sector - 1) // sector
+                # a sub-sector edge whose block is not resident anywhere
+                # needs the rest of the sector read from backing before the
+                # dirty block is whole (read-modify-write); resident blocks
+                # merge in cache for free
+                store.price_rmw(lo, hi, phase)
                 lvl.stats.add_write_op((b1 - b0) * sector, phase)
                 for bid in range(b0, b1):
                     # birth = the clean->dirty transition: a block re-dirtied

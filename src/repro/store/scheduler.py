@@ -41,6 +41,7 @@ from ..core.io_sim import (
 )
 from ..obs.trace import NULL_TRACER
 from .cache import BlockCache
+from .evloop import JobCompletion, QoS, ServiceWindow, build_job
 from .flush import FlushPolicy
 from .prefetch import SequentialReadahead
 from .stats import DrainRecord, TierStats
@@ -242,11 +243,44 @@ class TieredStore:
             return
         b0 = lo // self.sector
         b1 = (hi + self.sector - 1) // self.sector
+        if not flush:
+            self.price_rmw(lo, hi, phase)
         self.backing_stats.add_write_op((b1 - b0) * self.sector, phase, flush)
         if not flush:
             for bid in range(b0, b1):
                 for lvl in self.levels:
                     lvl.cache.fill(bid)
+
+    def price_rmw(self, lo: int, hi: int, phase: int = 0) -> None:
+        """Sub-sector write edges pay read-modify-write.
+
+        A write extent that starts or ends mid-sector shares its edge
+        sector with bytes already on media (the previous append's tail in
+        the 8-aligned append-only layout); a sector-granular device cannot
+        write part of a sector, so the merge needs the rest of the sector
+        first.  If the edge block is resident in any cache tier (clean or
+        dirty) the merge happens in cache for free — that is exactly why
+        write-through fills and write-back dirty residency suppress repeat
+        RMW on a hot append point.  Otherwise one sector-sized read is
+        priced on the backing tier (it is a miss everywhere) and counted in
+        ``rmw_iops``/``rmw_bytes``.  The read lands in the same phase
+        bucket as the write it unblocks, so drains, ``model_time``,
+        attribution and the event loop all see it; the *logical* trace
+        never does — RMW is a device artifact, not a request."""
+        lo, hi = int(lo), int(hi)
+        edges = []
+        if lo % self.sector:
+            edges.append(lo // self.sector)
+        if hi % self.sector and hi < len(self.disk):
+            bid = hi // self.sector
+            if bid not in edges:
+                edges.append(bid)
+        for bid in edges:
+            if any(bid in lvl.cache for lvl in self.levels):
+                continue
+            self.backing_stats.add_op(self.sector, phase)
+            self.backing_stats.rmw_iops += 1
+            self.backing_stats.rmw_bytes += self.sector
 
     def flush_all(self) -> int:
         """Commit barrier: make every dirty block durable (no-op without a
@@ -334,6 +368,7 @@ class ReadBatch:
         self.scheduler = scheduler
         self.label = label
         self.prefetch = prefetch
+        self.request: Optional[str] = None  # stamped by IOScheduler.batch
         self.ops: List[Tuple[int, int, int]] = []
         self._useful = 0
         self.n_requests = 0
@@ -445,6 +480,7 @@ class WriteBatch:
     def __init__(self, scheduler: "IOScheduler", label: str = "write"):
         self.scheduler = scheduler
         self.label = label
+        self.request: Optional[str] = None  # stamped by write_batch
         self.ops: List[Tuple[int, int, int]] = []
         self._closed = False
 
@@ -496,17 +532,86 @@ class IOScheduler:
         self._useful = 0
         self.n_batches = 0
         self.n_write_batches = 0
+        # Event-loop serving plane (pure timing overlay — never feeds back
+        # into classification or pricing).  Outside a service window every
+        # drain completes immediately at its serial price on the virtual
+        # clock; inside one, drains become Jobs the window simulates.
+        self.vclock = 0.0
+        self.completions: List[JobCompletion] = []
+        self._window: Optional[ServiceWindow] = None
+        self._request_seq = 0
+        self._job_seq = 0
 
     def batch(self, label: str = "io", prefetch: bool = False) -> ReadBatch:
-        return ReadBatch(self, label, prefetch=prefetch)
+        rb = ReadBatch(self, label, prefetch=prefetch)
+        self._request_seq += 1
+        rb.request = f"{label}#{self._request_seq}"
+        win = self._window
+        if win is not None and win._cur is not None and win._cur.request:
+            rb.request = win._cur.request
+        return rb
 
     def write_batch(self, label: str = "write") -> WriteBatch:
-        return WriteBatch(self, label)
+        wb = WriteBatch(self, label)
+        self._request_seq += 1
+        wb.request = f"{label}#{self._request_seq}"
+        return wb
+
+    def service_window(self, qos: Optional[QoS] = None) -> ServiceWindow:
+        """Open a multi-request serving window: drains completed inside it
+        are captured as event-loop jobs (tagged per request via
+        ``window.request(tenant=..., at=...)``) and priced together by
+        ``window.run("interleaved")`` / ``run("serial")`` — the same
+        executed workload under both dispatch models."""
+        return ServiceWindow(self, qos)
+
+    def _devices(self) -> List[DeviceModel]:
+        """Tier devices in drain-record index order (levels, then backing)."""
+        return [lvl.device for lvl in self.store.levels] + [self.store.backing]
+
+    def flush_barrier(self) -> int:
+        """Commit-barrier flush routed through the serving plane.
+
+        ``TieredStore.flush_all`` records its drains but runs outside any
+        batch close, so calling it directly would leave the barrier's write
+        runs invisible to the virtual clock and to an open service window.
+        This wrapper lifts them like every other drain — inside a window
+        the flush becomes one more job sharing the device queues with the
+        in-flight reads, which is exactly the read/flush interleaving the
+        event loop prices."""
+        n0 = len(self.store.drain_log)
+        n = self.store.flush_all()
+        self._ingest_drains(n0, request="flush:barrier")
+        return n
+
+    def _ingest_drains(self, n0: int, request: Optional[str] = None) -> None:
+        """Lift every drain the closing batch appended (its own, plus any
+        flush drains its close triggered) into the serving plane."""
+        log = self.store.drain_log
+        if len(log) <= n0:
+            return
+        win = self._window
+        for rec in log[n0:]:
+            self._job_seq += 1
+            job = build_job(rec, self._devices(), request=request,
+                            seq=self._job_seq, submit=self.vclock)
+            if win is not None:
+                win._submit(job)
+            else:
+                done = self.vclock + job.serial_time(self.queue_depth)
+                self.completions.append(JobCompletion(
+                    rec.label, job.tenant, request, rec.n_requests,
+                    self.vclock, done))
+                self.vclock = done
 
     def _finish_write(self, batch: WriteBatch) -> None:
         tr = self.tracer
-        with tr.span(f"write:{batch.label}", cat="scheduler",
-                     n_ops=len(batch.ops),
+        n0 = len(self.store.drain_log)
+        # every batch gets its own Perfetto track so concurrent requests
+        # render as separate lanes instead of one flat span stream
+        tid = tr.track(batch.request) if tr.enabled else None
+        with tr.span(f"write:{batch.label}", cat="scheduler", tid=tid,
+                     n_ops=len(batch.ops), request=batch.request,
                      bytes=sum(sz for _, sz, _ in batch.ops)):
             self.write_ops.extend(batch.ops)
             self.n_write_batches += 1
@@ -515,25 +620,32 @@ class IOScheduler:
             if policy is None:
                 # unattached stores behave write-through: durable at batch
                 # close
-                with tr.span("dispatch:write-through", cat="scheduler"):
+                with tr.span("dispatch:write-through", cat="scheduler",
+                             tid=tid):
                     for phase in sorted(extents):
                         for lo, hi in extents[phase]:
                             self.store.dispatch_write_extent(lo, hi, phase)
             else:
-                with tr.span("absorb", cat="flush"):
+                with tr.span("absorb", cat="flush", tid=tid):
                     policy.absorb(self.store, extents)
             self.store.end_batch(batch.label)
             if policy is not None:
                 policy.on_batch_end(self.store)
+            self._ingest_drains(n0, request=batch.request)
         if tr.enabled:
             self._sample_counters()
 
     def _finish(self, batch: ReadBatch) -> None:
         tr = self.tracer
+        n0 = len(self.store.drain_log)
         logical_bytes = sum(sz for _, sz, _ in batch.ops)
-        with tr.span(f"drain:{batch.label}", cat="scheduler",
+        # per-request track id: concurrent takers get separate Perfetto
+        # lanes (the request id is also stamped into args for filtering)
+        tid = tr.track(batch.request) if tr.enabled else None
+        with tr.span(f"drain:{batch.label}", cat="scheduler", tid=tid,
                      n_ops=len(batch.ops), bytes=logical_bytes,
-                     n_requests=batch.n_requests, prefetch=batch.prefetch):
+                     n_requests=batch.n_requests, prefetch=batch.prefetch,
+                     request=batch.request):
             self.ops.extend(batch.ops)
             self._useful += batch._useful
             self.n_batches += 1
@@ -559,7 +671,7 @@ class IOScheduler:
             # of the backing one.
             if (batch.prefetch and self.readahead is not None
                     and self.store.levels):
-                with tr.span("readahead", cat="scheduler"):
+                with tr.span("readahead", cat="scheduler", tid=tid):
                     disk_len = len(self.store.disk)
                     for o, sz, p in batch.ops:
                         if sz <= 0:
@@ -570,12 +682,12 @@ class IOScheduler:
                             if phi > plo:
                                 self.store.dispatch_extent(plo, phi, p,
                                                            prefetch=True)
-            with tr.span("coalesce", cat="scheduler") as csp:
+            with tr.span("coalesce", cat="scheduler", tid=tid) as csp:
                 extents = merge_phase_extents(batch.ops, gap=0)
                 csp.set(n_phases=len(extents),
                         n_extents=sum(len(v) for v in extents.values()))
             for phase in sorted(extents):
-                with tr.span(f"dispatch:p{phase}", cat="scheduler",
+                with tr.span(f"dispatch:p{phase}", cat="scheduler", tid=tid,
                              n_extents=len(extents[phase])):
                     for lo, hi in extents[phase]:
                         self.store.dispatch_extent(lo, hi, phase)
@@ -586,6 +698,7 @@ class IOScheduler:
             # batches too so dirty data ages out under read-heavy mixes
             if self.store.flush_policy is not None:
                 self.store.flush_policy.on_batch_end(self.store)
+            self._ingest_drains(n0, request=batch.request)
         if tr.enabled:
             self._sample_counters()
 
@@ -630,6 +743,10 @@ class IOScheduler:
         self._useful = 0
         self.n_batches = 0
         self.n_write_batches = 0
+        self.vclock = 0.0
+        self.completions = []
+        self._request_seq = 0
+        self._job_seq = 0
         self.store.reset_stats()
         self.workload.reset()
         if self.readahead is not None:

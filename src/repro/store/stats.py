@@ -70,6 +70,10 @@ class TierStats:
     bytes_written: int = 0   # sector-aligned bytes written to this tier
     flush_iops: int = 0      # subset of write_iops issued by the flusher
     flush_bytes: int = 0     # subset of bytes_written issued by the flusher
+    rmw_iops: int = 0        # read-modify-write merge reads (sub-sector
+                             # write edges not resident in any cache tier);
+                             # subset of n_iops — see TieredStore.price_rmw
+    rmw_bytes: int = 0       # subset of bytes_read issued by RMW merges
     dirty_bytes: int = 0     # resident dirty bytes (folded in at query time)
     lost_bytes: int = 0      # dirty bytes discarded by a simulated crash
     max_phase: int = 0       # deepest dependency phase seen (+1)
@@ -157,6 +161,7 @@ class TierStats:
         self.prefetch_iops = self.prefetch_bytes = 0
         self.write_iops = self.bytes_written = 0
         self.flush_iops = self.flush_bytes = 0
+        self.rmw_iops = self.rmw_bytes = 0
         self.dirty_bytes = self.lost_bytes = 0
         self.max_phase = 0
         self.phase_ops = {}

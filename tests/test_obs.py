@@ -101,13 +101,14 @@ def test_workload_scan_fraction_none_and_bias_flip():
     w = WorkloadStats()
     assert w.scan_fraction is None
     assert w.preferred_admission() == "always"   # cold-start default
-    w.note_batch("scan:c", prefetch=True, n_ops=4, nbytes=1000)
+    # the scan must beat takes by the hysteresis margin to earn a flip
+    w.note_batch("scan:c", prefetch=True, n_ops=4, nbytes=1100)
     w.note_batch("take:c", prefetch=False, n_ops=4, nbytes=999)
-    assert w.scan_fraction == pytest.approx(1000 / 1999)
+    assert w.scan_fraction == pytest.approx(1100 / 2099)
     assert w.preferred_admission() == "second_touch"
     # bias < 1 discounts scans: the same trace now reads take-heavy
     w2 = WorkloadStats(scan_bias=0.5)
-    w2.note_batch("scan:c", prefetch=True, n_ops=4, nbytes=1000)
+    w2.note_batch("scan:c", prefetch=True, n_ops=4, nbytes=1100)
     w2.note_batch("take:c", prefetch=False, n_ops=4, nbytes=999)
     assert w2.preferred_admission() == "always"
 
@@ -211,7 +212,8 @@ def test_trace_export_chrome_schema(tmp_path):
     assert doc["traceEvents"], "instrumented take emitted no events"
     for ev in doc["traceEvents"]:
         assert {"name", "ph", "ts", "pid", "tid"} <= set(ev)
-        assert ev["ph"] in ("X", "i", "C")
+        # "M" = thread_name metadata naming the per-request tracks
+        assert ev["ph"] in ("X", "i", "C", "M")
         if ev["ph"] == "X":
             assert ev["dur"] >= 0
         if ev["ph"] == "i":
@@ -366,3 +368,117 @@ def test_run_meta_and_nan_refusal(bench_run, tmp_path):
         set(doc["meta"]["run"])
     with pytest.raises(ValueError):
         bench_run._dump_json(str(out), {"v": float("nan")})
+
+
+# ---------------------------------------------------------------------------
+# Serving plane: attribution exactness with flushes in flight, per-request
+# trace tracks, percentile gate rules
+# ---------------------------------------------------------------------------
+
+
+def test_attribution_exact_with_reads_and_flushes_in_flight():
+    """Per-tier attributed sums must stay exact to model_time (1e-9) when a
+    service window holds concurrent reads AND write-back flush runs — the
+    event loop is a timing overlay and must not perturb the accounting the
+    attributor prices."""
+    from repro.dataset import DatasetWriter
+    from repro.store import TieredStore
+
+    rng = np.random.default_rng(6)
+    arr = A.PrimitiveArray.build(
+        rng.integers(0, 1 << 16, 4000).astype(np.int64))
+    fb = write_table({"c": arr}, WriteOptions("lance-fullzip"))
+    w = DatasetWriter(
+        files=[fb],
+        store=lambda d: TieredStore.cached(d, cache_bytes=16 * 4096),
+        flush="write-back")
+    with w.scheduler.service_window() as win:
+        for i in range(4):
+            with win.request(tenant="reader", at=i * 1e-4):
+                w.take("c", rng.integers(0, 4000, 64))
+            with win.request(tenant="ingest", at=i * 1e-4):
+                w.append({"c": A.PrimitiveArray.build(
+                    rng.integers(0, 100, 300).astype(np.int64))},
+                    commit=(i % 2 == 1))
+        res = win.run("interleaved")
+    # flush runs really were in flight alongside the reads
+    labels = {c.label for c in res.completions}
+    assert any(lab.startswith("take:") for lab in labels)
+    assert any(lab.startswith("flush:") for lab in labels)
+    qd = w.scheduler.queue_depth
+    att = attribute(w.store, queue_depth=qd)
+    sums = att.tier_sums()
+    devices = [lvl.device for lvl in w.store.levels] + [w.store.backing]
+    checked = 0
+    for stats, dev in zip(w.tier_stats(), devices):
+        mt = stats.model_time(dev, qd)
+        if mt:
+            assert abs(sums[stats.name] - mt) / mt < 1e-9
+            checked += 1
+    assert checked >= 2
+
+
+def test_trace_per_request_tracks_for_concurrent_takers():
+    """Bugfix regression: multi-request traces used to emit one flat span
+    stream; scheduler spans must carry a per-request tid (plus the request
+    id in args) so Perfetto renders concurrent takers as separate lanes."""
+    tr = Tracer()
+    fr, n = _mb_reader(store="tiered", tracer=tr)
+    with fr.scheduler.service_window() as win:
+        with win.request(tenant="a", request="a/0"):
+            fr.take("c", np.arange(40))
+        with win.request(tenant="b", request="b/0"):
+            fr.take("c", np.arange(40, 80))
+    drains = [e for e in tr.events
+              if e["ph"] == "X" and e["name"].startswith("drain:")]
+    assert len(drains) == 2
+    assert drains[0]["tid"] != drains[1]["tid"]          # separate lanes
+    assert {d["args"]["request"] for d in drains} == {"a/0", "b/0"}
+    # thread_name metadata labels each lane with its request id
+    meta = {e["tid"]: e["args"]["name"] for e in tr.events
+            if e["ph"] == "M" and e["name"] == "thread_name"}
+    for d in drains:
+        assert meta[d["tid"]] == d["args"]["request"]
+    # child spans (coalesce/dispatch) ride the same lane as their drain
+    children = [e for e in tr.events if e["ph"] == "X"
+                and e["name"].startswith(("coalesce", "dispatch:"))]
+    assert children and all(e["tid"] in meta for e in children)
+    # untagged requests still get stable distinct per-batch tracks
+    tr2 = Tracer()
+    fr2, _ = _mb_reader(store="tiered", tracer=tr2)
+    fr2.take("c", np.arange(10))
+    fr2.take("c", np.arange(10, 20))
+    d2 = [e for e in tr2.events
+          if e["ph"] == "X" and e["name"].startswith("drain:")]
+    assert d2[0]["tid"] != d2[1]["tid"]
+
+
+def test_bench_gate_percentile_keys_are_strict(bench_gate):
+    """Percentile metrics are modelled, not measured: they must be compared
+    deterministically even when the key carries a rate-marker substring."""
+    assert bench_gate._is_percentile_key("p99_interleaved_ms")
+    assert bench_gate._is_percentile_key("latency_p50")
+    assert bench_gate._is_percentile_key("p999")
+    assert bench_gate._is_percentile_key("p99_speedup_serial_over_interleaved")
+    assert not bench_gate._is_percentile_key("rows_per_s")
+    assert not bench_gate._is_percentile_key("phase2_ops")
+    assert not bench_gate._is_percentile_key("top99")
+    base = {"headline": {"p99_interleaved_ms": 10.0, "p50_count": 7,
+                         "p99_speedup_serial_over_interleaved": 3.0,
+                         "rows_per_s": 100.0}}
+    drift = json.loads(json.dumps(base))
+    drift["headline"]["p99_interleaved_ms"] = 10.5
+    fails = bench_gate.compare(base, drift)
+    assert len(fails) == 1 and "p99_interleaved_ms" in fails[0]
+    # the speedup percentile is NOT skipped as a rate
+    drift2 = json.loads(json.dumps(base))
+    drift2["headline"]["p99_speedup_serial_over_interleaved"] = 2.0
+    assert bench_gate.compare(base, drift2)
+    # integer percentile metadata stays counted-strict
+    drift3 = json.loads(json.dumps(base))
+    drift3["headline"]["p50_count"] = 8
+    assert bench_gate.compare(base, drift3)
+    # plain rates are still ignored without --rates
+    drift4 = json.loads(json.dumps(base))
+    drift4["headline"]["rows_per_s"] = 9.0
+    assert bench_gate.compare(base, drift4) == []

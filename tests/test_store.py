@@ -591,3 +591,129 @@ def test_retriever_tiered():
     assert st.n_iops == len(ids)  # full-zip fixed width: 1 IOP/row
     assert r.modelled_time() < cold
     assert r.tier_stats()[1].n_iops == 0  # warm: no S3 traffic
+
+
+# ---------------------------------------------------------------------------
+# Admission hysteresis: the auto policy must not thrash on the boundary
+# ---------------------------------------------------------------------------
+
+
+def test_admission_hysteresis_no_thrash_on_alternating_mix():
+    """An alternating scan/take workload whose byte mix oscillates around
+    the boundary must not flip the preference batch to batch: inside the
+    +-10% band the previous decision sticks (each flip resets second-touch
+    ghost state, so thrashing is not free)."""
+    ws = WorkloadStats()
+    # establish a clear scan majority -> one flip to second_touch
+    ws.note_batch("scan:c", prefetch=True, n_ops=4, nbytes=150_000)
+    assert ws.preferred_admission() == "second_touch"
+    # pull the mix back to parity: inside the band the flip does NOT revert
+    ws.note_batch("take:c", prefetch=False, n_ops=40, nbytes=145_000)
+    assert ws.preferred_admission() == "second_touch"
+    # alternate batches that rock the byte majority back and forth across
+    # parity while staying inside the +-10% band: a memoryless majority
+    # test would flip on every sign change, the hysteresis never does
+    prefs = []
+    sign_changes = 0
+    for i in range(20):
+        if i % 2:
+            ws.note_batch("scan:c", prefetch=True, n_ops=1, nbytes=10_000)
+        else:
+            ws.note_batch("take:c", prefetch=False, n_ops=10, nbytes=10_000)
+        prefs.append(ws.preferred_admission())
+        ratio = ws.scan_bytes / ws.take_bytes
+        assert 1.0 / 1.1 <= ratio <= 1.1      # genuinely inside the band
+        if (ws.scan_bytes > ws.take_bytes) != (i % 2 == 0):
+            sign_changes += 1
+    assert sign_changes >= 8                  # the majority really oscillated
+    assert set(prefs) == {"second_touch"}     # sticky: zero flips in the band
+    # a decisive take majority still flips (hysteresis delays, not disables)
+    ws.note_batch("take:c", prefetch=False, n_ops=100, nbytes=300_000)
+    assert ws.preferred_admission() == "always"
+
+
+def test_admission_hysteresis_zero_restores_majority_test():
+    ws = WorkloadStats(hysteresis=0.0)
+    ws.note_batch("scan:c", prefetch=True, n_ops=1, nbytes=1001)
+    ws.note_batch("take:c", prefetch=False, n_ops=1, nbytes=1000)
+    assert ws.preferred_admission() == "second_touch"
+    ws.note_batch("take:c", prefetch=False, n_ops=1, nbytes=2)
+    assert ws.preferred_admission() == "always"
+    with pytest.raises(ValueError):
+        WorkloadStats(hysteresis=-0.1)
+
+
+# ---------------------------------------------------------------------------
+# Partial-block RMW accounting for sub-sector appends
+# ---------------------------------------------------------------------------
+
+
+def test_rmw_sub_sector_write_charges_backing_read():
+    """A write-through append landing mid-sector pays one read-modify-write
+    sector read on the backing tier; a second write to the now-resident
+    sector is free (the write-through fill made the edge mergeable in
+    cache)."""
+    disk = Disk(np.zeros(64 * 4096, np.uint8))
+    store = _wb_store(disk, mode="write-through")
+    sched = IOScheduler(store)
+    with sched.write_batch("append:0") as wb:
+        wb.write(100, b"z" * 1000)          # head+tail edges in one sector
+    nvme, s3 = store.tier_stats()
+    assert s3.rmw_iops == 1 and s3.rmw_bytes == 4096
+    assert s3.n_iops == 1                   # the RMW read is real read IO
+    assert s3.write_iops == 1
+    # the logical write trace records the append, not the device artifact
+    assert sched.write_stats().n_iops == 1
+    assert sched.write_stats().bytes_read == 1000
+    assert sched.stats().n_iops == 0        # logical *read* trace untouched
+    with sched.write_batch("append:1") as wb:
+        wb.write(1100, b"z" * 500)          # same sector, now resident
+    assert store.tier_stats()[1].rmw_iops == 1  # no new RMW
+
+
+def test_rmw_aligned_and_eof_writes_are_free():
+    disk = Disk(np.zeros(64 * 4096, np.uint8))
+    store = _wb_store(disk, mode="write-through")
+    sched = IOScheduler(store)
+    with sched.write_batch() as wb:
+        wb.write(4096, b"a" * 8192)         # sector-aligned both ends
+    assert store.tier_stats()[1].rmw_iops == 0
+    with sched.write_batch() as wb:
+        wb.write(64 * 4096 - 1000, b"b" * 1000)  # unaligned head, ends at EOF
+    s3 = store.tier_stats()[1]
+    assert s3.rmw_iops == 1                 # head edge only: no bytes beyond
+    assert s3.rmw_bytes == 4096
+
+
+def test_rmw_write_back_flush_path():
+    """Write-back: the RMW charge lands when the flush writes the dirty run
+    down, and dirty residency of the edge sector suppresses it."""
+    disk = Disk(np.zeros(64 * 4096, np.uint8))
+    store = _wb_store(disk)
+    sched = IOScheduler(store)
+    with sched.write_batch("append:0") as wb:
+        wb.write(100, b"z" * 1000)
+    nvme, s3 = store.tier_stats()
+    # absorb: the edge sector is not resident anywhere yet -> RMW at absorb
+    assert s3.rmw_iops == 1 and nvme.dirty_bytes == 4096
+    with sched.write_batch("append:1") as wb:
+        wb.write(1100, b"z" * 500)          # edge sector resident dirty
+    assert store.tier_stats()[1].rmw_iops == 1   # suppressed
+    store.flush_all()
+    s3 = store.tier_stats()[1]
+    assert s3.rmw_iops == 1                 # flush itself never re-charges
+    assert s3.flush_iops == 1
+
+
+def test_rmw_counters_survive_snapshot_and_reset():
+    disk = Disk(np.zeros(16 * 4096, np.uint8))
+    store = _wb_store(disk, mode="write-through")
+    sched = IOScheduler(store)
+    with sched.write_batch() as wb:
+        wb.write(50, b"q" * 100)
+    snap = store.tier_stats()[1]
+    assert snap.rmw_iops == 1 and snap.rmw_bytes == 4096
+    store.reset_stats()
+    live = store.backing_stats
+    assert live.rmw_iops == 0 and live.rmw_bytes == 0
+    assert snap.rmw_iops == 1               # snapshot is decoupled

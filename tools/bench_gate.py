@@ -11,6 +11,10 @@ code they reproduce bit-for-bit, so the gate can be strict:
 * deterministic floats (``model_io_s``, ``per_row_us`` percentiles, ...)
   must match to 1e-6 relative (rounding at the artifact write site is the
   only slack needed);
+* nearest-rank percentile metrics (keys carrying a ``p50``/``p99``/``p999``
+  segment, e.g. the serving plane's per-tenant latency summaries) are
+  modelled, not measured — they follow the strict rules above even when the
+  key also contains a rate-marker substring;
 * wall-clock and throughput numbers (``rows_per_s``, ``cpu_decode_s``,
   speedups) are machine noise and are ignored unless ``--rates`` opts in,
   which checks them only within a loose ``--rate-tol`` band.
@@ -36,6 +40,7 @@ import argparse
 import glob
 import json
 import os
+import re
 import sys
 from typing import List
 
@@ -45,7 +50,17 @@ RATE_MARKERS = ("rows_per_s", "per_s", "speedup", "cpu_", "wall", "walk",
                 "tokens", "mtok", "mvals")
 # exact key names that are wall-clock measurements without a marker substring
 RATE_EXACT = frozenset({"scan_s"})
+# nearest-rank percentile metrics (p50/p99/p999 latency summaries from the
+# serving plane and the latency attributor) are *modelled*, not measured:
+# deterministic on equal code, so they get the strict rules (ints counted,
+# floats 1e-6) even when the key also carries a rate marker — e.g.
+# "p99_speedup_serial_over_interleaved" is a modelled ratio, not wall clock.
+PCT_RE = re.compile(r"(?:^|_)p\d+(?:_|$)")
 FLOAT_RTOL = 1e-6
+
+
+def _is_percentile_key(key: str) -> bool:
+    return PCT_RE.search(key.lower()) is not None
 
 
 def _is_rate_key(key: str) -> bool:
@@ -79,9 +94,11 @@ def compare(baseline, current, *, rates: bool = False,
                              path=f"{path}[{i}]")
         return fails
 
-    # leaf: classify by the final key segment
+    # leaf: classify by the final key segment.  Percentile keys are checked
+    # first — a modelled percentile stays strict even if its name happens to
+    # contain a rate-marker substring.
     leaf_key = path.rsplit(".", 1)[-1]
-    if _is_rate_key(leaf_key):
+    if not _is_percentile_key(leaf_key) and _is_rate_key(leaf_key):
         if rates and isinstance(baseline, (int, float)) \
                 and isinstance(current, (int, float)) and baseline:
             rel = abs(current - baseline) / abs(baseline)
