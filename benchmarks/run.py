@@ -922,10 +922,13 @@ def serve_bench():
     (repro.obs.attribute) runs over the same trace with reads and flushes
     in flight together; its per-tier residual against model_time is
     reported, not hidden."""
+    from repro.core.io_sim import Degradation
     from repro.dataset import DatasetWriter
+    from repro.obs import (NULL_TRACER, BurnWindow, MetricsPlane,
+                           SLOMonitor)
     from repro.serve.workload import (TenantSpec, ZipfWorkload, drive,
                                       tenant_summary)
-    from repro.store import TieredStore
+    from repro.store import EventLoop, TieredStore
 
     n_frag = 4 if SMOKE else 8
     rows_per = 1_000 if SMOKE else 6_000
@@ -964,7 +967,7 @@ def serve_bench():
     reqs = wl.generate()
     rng2 = np.random.default_rng(13)
     t0 = time.perf_counter()
-    inter, serial = drive(
+    inter, serial, win = drive(
         w, "c", reqs, qos=wl.qos(),
         append_table=lambda: table(rng2, rows_per // 4),
         append_every=max(n_requests // 8, 1), commit_every=2)
@@ -991,6 +994,88 @@ def serve_bench():
 
     p99_i = sum_inter["all"]["p99"]
     p99_s = sum_serial["all"]["p99"]
+
+    # ---- live metrics plane + SLO: healthy re-pricing -------------------
+    # Objectives ride on TenantSpec; thresholds derive from the healthy
+    # run's own (deterministic, virtual-clock) latencies so the healthy
+    # phase never breaches and any post-degradation breach is real signal.
+    for spec in tenants:
+        healthy = tenant_summary(inter, [spec.name])[spec.name]
+        spec.slo_ms = round(healthy["max"] * 1.1, 6)
+        spec.slo_target = 0.99 if spec.name == "premium" else 0.95
+    slo_windows = (BurnWindow(long_s=0.5, short_s=0.0625,
+                              burn_threshold=2.0),)
+    plane_h = MetricsPlane(window=0.25, n_windows=8, rel_err=0.01)
+    slo_tracer = TRACER if TRACER is not None else NULL_TRACER
+    slo_h = SLOMonitor(wl.slo_objectives(), windows=slo_windows,
+                       tracer=slo_tracer, registry=plane_h.registry,
+                       plane=plane_h)
+    inter_sampled = win.run("interleaved", plane=plane_h, slo=slo_h)
+    # hard contract: sampling is read-only — completions bit-identical
+    assert inter_sampled.completions == inter.completions, \
+        "metrics plane/SLO sampling must not perturb event-loop timing"
+    assert not slo_h.alerts, \
+        "healthy run must not breach (objectives derived from its own max)"
+
+    # ---- mid-run NVMe degradation + detection gates ---------------------
+    # NVMe "grey failure": 200x latency, 1% throughput from t_deg onward.
+    # The factors are deliberately strong — S3's 30 ms round trips dominate
+    # healthy latency, so a mild NVMe stutter hides inside the S3 tail;
+    # this is the firmware-stall / thermal-throttle shape where the fast
+    # tier becomes the bottleneck.
+    t_deg = round(inter.makespan * 0.5, 6)
+    fault = Degradation(start=t_deg, latency_factor=200.0,
+                        throughput_factor=0.01)
+    devices = w.scheduler._devices()
+    nvme_dev = next(d for d in devices if d.name.startswith("nvme"))
+    deg_devices = [d.with_fault(fault) if d is nvme_dev else d
+                   for d in devices]
+    plane_d = MetricsPlane(window=0.25, n_windows=8, rel_err=0.01)
+    slo_d = SLOMonitor(wl.slo_objectives(), windows=slo_windows,
+                       tracer=slo_tracer, registry=plane_d.registry,
+                       plane=plane_d)
+    deg = EventLoop(deg_devices, queue_depth=qd, qos=wl.qos(),
+                    plane=plane_d, slo=slo_d).run(win.jobs,
+                                                  mode="interleaved")
+    sum_deg = tenant_summary(deg, names)
+    alert = slo_d.first_alert("premium")
+    detect_bound_s = 1.0  # gated: breach must fire within this much
+    assert alert is not None, \
+        "NVMe degradation must fire slo.breach.premium"
+    detect_delay = alert.at - t_deg
+    assert 0.0 <= detect_delay <= detect_bound_s, \
+        f"premium burn alert took {detect_delay:.3f}s virtual " \
+        f"(bound {detect_bound_s}s after degradation at t={t_deg}s)"
+    util = plane_d.series[f"tier.{nvme_dev.name}.utilization"]
+    pre = util.between(0.0, t_deg)
+    post = util.between(t_deg, float("inf"))
+    pre_util = sum(pre) / len(pre) if pre else 0.0
+    post_util = sum(post) / len(post) if post else 0.0
+    assert post_util >= 0.9 and post_util > pre_util, \
+        f"degraded NVMe utilization must saturate " \
+        f"(pre={pre_util:.3f}, post={post_util:.3f})"
+    if TRACER is not None and TRACER.enabled:
+        plane_d.to_trace(TRACER)  # virtual-clock counter tracks
+
+    # ---- closed-loop arrival comparison cell ----------------------------
+    # Same tenants and Zipf skew, fixed client population with think time.
+    # Coordinated omission: under load the closed loop throttles its own
+    # arrivals, so its percentiles are not comparable to open-loop ones as
+    # measurements of the same server — the cell reports both to show the
+    # contrast, the open-loop numbers stay the headline.
+    w2 = DatasetWriter(
+        files=seeds,
+        store=lambda d: TieredStore.cached(d, cache_bytes=budget),
+        flush="write-back", opts=WriteOptions("lance-fullzip"),
+        queue_depth=qd, tracer=TRACER)
+    wl_c = ZipfWorkload(n_rows=w2.n_rows, tenants=tenants,
+                        n_requests=n_requests, zipf_s=1.05, seed=3,
+                        arrival="closed", think_time=0.02,
+                        clients_per_tenant=4)
+    inter_c, serial_c, _win_c = drive(w2, "c", wl_c.generate(),
+                                      qos=wl_c.qos(), think_time=0.02)
+    sum_closed = tenant_summary(inter_c, names)
+
     results = {
         "meta": {"n_fragments": n_frag, "rows_per_fragment": rows_per,
                  "n_requests": n_requests, "arrival_rate_per_s": arrival_rate,
@@ -1020,6 +1105,40 @@ def serve_bench():
         "attribution": {"per_row_us": per_row_us,
                         "n_attributed_requests": pct.get("count"),
                         "residual_rel": residual},
+        "slo": {
+            "objectives": {t.name: {"slo_ms": t.slo_ms,
+                                    "target": t.slo_target}
+                           for t in tenants},
+            "burn_window": {"long_s": slo_windows[0].long_s,
+                            "short_s": slo_windows[0].short_s,
+                            "threshold": slo_windows[0].burn_threshold},
+            "healthy_breaches": slo_h.breach_counts(),
+            "degraded": {
+                "t_degradation_s": t_deg,
+                "latency_factor": fault.latency_factor,
+                "throughput_factor": fault.throughput_factor,
+                "first_premium_alert_t": round(alert.at, 6),
+                "detection_delay_s": round(detect_delay, 6),
+                "detection_bound_s": detect_bound_s,
+                "breaches": slo_d.breach_counts(),
+                "nvme_utilization_pre": round(pre_util, 6),
+                "nvme_utilization_post": round(post_util, 6),
+                "table": slo_d.table(),
+            },
+        },
+        "metrics_plane": plane_d.export(max_points=64),
+        "closed_loop": {
+            "arrival": "closed", "think_time_s": wl_c.think_time,
+            "clients_per_tenant": wl_c.clients_per_tenant,
+            "interleaved_ms": sum_closed,
+            "makespan_s": round(inter_c.makespan, 6),
+            "open_vs_closed_p99_ms": {
+                "open": round(p99_i, 6),
+                "closed": round(sum_closed["all"]["p99"], 6),
+            },
+            "caveat": "closed-loop percentiles hide coordinated omission; "
+                      "not comparable to open-loop as server measurements",
+        },
         "headline": {
             "gate": "interleaved event-loop p99 < serial batch-drain p99",
             "p50_interleaved_ms": round(sum_inter["all"]["p50"], 6),
@@ -1046,6 +1165,12 @@ def serve_bench():
     # queueing delay under round contention.
     _dump_json("BENCH_serve.json", results)
     _emit("serve/written", 0.0, "path=BENCH_serve.json")
+    with open("BENCH_serve.prom", "w") as f:
+        f.write(plane_d.prometheus_text())
+    _emit("serve/slo", detect_delay * 1e6,
+          f"detect_delay_s={detect_delay:.4f};"
+          f"nvme_util_post={post_util:.3f};"
+          f"breaches={slo_d.breach_counts()};path=BENCH_serve.prom")
 
 
 def kernel_bench():

@@ -22,8 +22,9 @@ from typing import Dict, List, Optional, Sequence, Tuple
 import numpy as np
 
 __all__ = [
-    "Disk", "DiskView", "IOTracker", "IOStats", "DeviceModel", "NVME", "S3",
-    "HBM", "DRAM", "model_time", "merge_phase_extents", "trace_stats",
+    "Disk", "DiskView", "IOTracker", "IOStats", "DeviceModel", "Degradation",
+    "NVME", "S3", "HBM", "DRAM", "model_time", "merge_phase_extents",
+    "trace_stats",
 ]
 
 
@@ -277,6 +278,37 @@ class IOTracker:
 
 
 @dataclasses.dataclass(frozen=True)
+class Degradation:
+    """A time-varying fault on a device: between ``start`` and ``end``
+    (virtual seconds) the device's round-trip latency is multiplied by
+    ``latency_factor`` and its effective bandwidth by ``throughput_factor``
+    (a throttled NVMe under thermal pressure, a saturated S3 prefix, a
+    firmware stall).
+
+    The fault plane lives strictly on the event-loop timing overlay
+    (:mod:`repro.store.evloop`): the *priced* accounting —
+    ``TierStats.model_time``, ``Job.serial_time``, logical IOPS/bytes —
+    never consults the fault schedule, so every committed baseline stays
+    bit-identical whether or not a device carries faults.  That asymmetry is
+    the point: the live metrics plane has to *detect* a degradation the
+    steady-state price model cannot see."""
+
+    start: float
+    end: float = float("inf")
+    latency_factor: float = 1.0
+    throughput_factor: float = 1.0
+
+    def __post_init__(self):
+        if self.latency_factor <= 0 or self.throughput_factor <= 0:
+            raise ValueError("degradation factors must be positive")
+        if self.end < self.start:
+            raise ValueError("degradation window ends before it starts")
+
+    def active(self, t: float) -> bool:
+        return self.start <= t < self.end
+
+
+@dataclasses.dataclass(frozen=True)
 class DeviceModel:
     """First-order device model from the paper's Fig. 1 measurements."""
 
@@ -285,6 +317,31 @@ class DeviceModel:
     seq_bw: float  # bytes/s sequential
     latency: float  # per-round-trip latency (seconds)
     min_read: int  # reads below this size cost the same as this size
+    # Fault-injection schedule, consulted only by the event-loop timing
+    # overlay (see Degradation).  () = healthy, the module constants below.
+    faults: Tuple["Degradation", ...] = ()
+
+    def with_fault(self, fault: "Degradation") -> "DeviceModel":
+        """A copy of this device carrying one more scheduled fault."""
+        return dataclasses.replace(self, faults=self.faults + (fault,))
+
+    def latency_factor_at(self, t: float) -> float:
+        """Round-trip latency multiplier at virtual time ``t`` (1.0 healthy;
+        overlapping faults compound)."""
+        f = 1.0
+        for d in self.faults:
+            if d.active(t):
+                f *= d.latency_factor
+        return f
+
+    def bandwidth_factor_at(self, t: float) -> float:
+        """Effective-bandwidth multiplier at virtual time ``t`` (1.0
+        healthy, < 1.0 degraded; overlapping faults compound)."""
+        f = 1.0
+        for d in self.faults:
+            if d.active(t):
+                f *= d.throughput_factor
+        return f
 
 
 # Samsung 970 EVO Plus measured in the paper: 850K IOPS @4KiB, 3,400 MiB/s.

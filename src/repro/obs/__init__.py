@@ -10,22 +10,43 @@ imports at module level, so any layer can depend on ``obs``):
 * :mod:`repro.obs.attrib` — :func:`attribute` decomposes each tier's
   ``model_time`` onto the logical requests that occupied each queue drain,
   yielding per-request modeled latencies and p50/p99/p999 summaries.
+* :mod:`repro.obs.timeseries` — the live plane: mergeable log-bucket
+  histograms, virtual-clock gauge series, and the :class:`MetricsPlane`
+  container (zero-cost when disabled: :data:`NULL_PLANE`).
+* :mod:`repro.obs.slo` — per-tenant latency objectives and rolling
+  multi-window error-budget burn-rate alerts (:class:`SLOMonitor`).
 """
 
 from .attrib import Attribution, DrainCost, attribute
-from .metrics import Counter, Histogram, MetricsRegistry, percentile
+from .metrics import (Counter, Histogram, MetricsRegistry, percentile,
+                      prometheus_text)
+from .slo import (DEFAULT_WINDOWS, BurnWindow, SLOAlert, SLObjective,
+                  SLOMonitor)
+from .timeseries import (NULL_PLANE, GaugeSeries, LogBucketHistogram,
+                         MetricsPlane, WindowedHistogram)
 from .trace import NULL_SPAN, NULL_TRACER, NullTracer, Tracer
 
 __all__ = [
     "Attribution",
+    "BurnWindow",
     "Counter",
+    "DEFAULT_WINDOWS",
     "DrainCost",
+    "GaugeSeries",
     "Histogram",
+    "LogBucketHistogram",
+    "MetricsPlane",
     "MetricsRegistry",
+    "NULL_PLANE",
     "NULL_SPAN",
     "NULL_TRACER",
     "NullTracer",
+    "SLOAlert",
+    "SLObjective",
+    "SLOMonitor",
     "Tracer",
+    "WindowedHistogram",
     "attribute",
     "percentile",
+    "prometheus_text",
 ]

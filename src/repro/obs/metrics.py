@@ -15,9 +15,10 @@ sits below every other layer and can never participate in an import cycle.
 from __future__ import annotations
 
 import math
-from typing import Dict, List, Sequence
+from typing import Dict, List, Optional, Sequence
 
-__all__ = ["Counter", "Histogram", "MetricsRegistry", "percentile"]
+__all__ = ["Counter", "Histogram", "MetricsRegistry", "percentile",
+           "prometheus_text"]
 
 
 def percentile(samples: Sequence[float], q: float) -> float:
@@ -85,8 +86,17 @@ class Histogram:
     def quantile(self, q: float) -> float:
         return percentile(self.samples, q)
 
-    def summary(self) -> Dict[str, float]:
-        """The fixed percentile set the benchmarks report."""
+    def summary(self) -> Dict[str, Optional[float]]:
+        """The fixed percentile set the benchmarks report.
+
+        An empty histogram reports ``count: 0`` with every statistic
+        ``None`` — never NaN and never a raise (``percentile`` raises on an
+        empty sample set by design, but a *summary* of "no data yet" is a
+        well-defined answer, and ``None`` is what the NaN-free bench policy
+        serializes as ``null``)."""
+        if not self.samples:
+            return {"count": 0, "mean": None, "p50": None, "p99": None,
+                    "p999": None, "max": None}
         return {
             "count": self.count,
             "mean": self.mean,
@@ -126,6 +136,49 @@ class MetricsRegistry:
             if name.startswith(prefix)
         }
 
+    def summaries(self, prefix: str = "") -> Dict[str, Dict]:
+        """Snapshot of all histogram summaries whose name starts with
+        ``prefix`` — the aggregate counterpart of :meth:`counter_values`
+        (empty histograms report ``count: 0`` / ``None`` statistics, so a
+        snapshot never raises)."""
+        return {
+            name: h.summary() for name, h in sorted(self.histograms.items())
+            if name.startswith(prefix)
+        }
+
     def reset(self) -> None:
         self.counters = {}
         self.histograms = {}
+
+
+def _prom_name(name: str) -> str:
+    """Sanitize a dotted metric name into the Prometheus charset."""
+    out = []
+    for ch in name:
+        out.append(ch if ch.isalnum() or ch == "_" else "_")
+    s = "".join(out)
+    return s if not s[:1].isdigit() else "_" + s
+
+
+def prometheus_text(registry: MetricsRegistry) -> str:
+    """Render a registry in the Prometheus text exposition format.
+
+    Counters become ``# TYPE <name> counter`` samples; raw-sample histograms
+    become ``summary`` families (``{quantile="..."}`` gauges plus ``_sum`` /
+    ``_count``), quantiles by the same exact nearest-rank estimator the
+    bench artifacts use.  Deterministic output (sorted names), so the dump
+    itself can be diffed across runs."""
+    lines: List[str] = []
+    for name, c in sorted(registry.counters.items()):
+        pn = _prom_name(name)
+        lines.append(f"# TYPE {pn} counter")
+        lines.append(f"{pn} {c.value}")
+    for name, h in sorted(registry.histograms.items()):
+        pn = _prom_name(name)
+        lines.append(f"# TYPE {pn} summary")
+        for q in (0.5, 0.99, 0.999):
+            if h.count:
+                lines.append(f'{pn}{{quantile="{q}"}} {h.quantile(q * 100)!r}')
+        lines.append(f"{pn}_sum {h.total!r}")
+        lines.append(f"{pn}_count {h.count}")
+    return "\n".join(lines) + "\n"

@@ -159,14 +159,19 @@ class Tracer:
         })
 
     def counter(self, name: str, values: Dict[str, float],
-                cat: str = "counter") -> None:
+                cat: str = "counter", ts: Optional[float] = None) -> None:
         """One sample on a counter track (Perfetto renders each key as a
-        series under the track ``name``)."""
+        series under the track ``name``).  ``ts`` overrides the host-clock
+        timestamp with an explicit microsecond value — the metrics plane
+        uses this to replay virtual-clock gauge series as counter tracks
+        (``MetricsPlane.to_trace``) so they line up with the simulated
+        timeline rather than orchestration wall time."""
         if not self.enabled:
             return
         self.events.append({
             "name": name, "cat": cat, "ph": "C",
-            "ts": self._now_us(), "pid": self.pid, "tid": self.tid,
+            "ts": self._now_us() if ts is None else float(ts),
+            "pid": self.pid, "tid": self.tid,
             "args": dict(values),
         })
 

@@ -119,6 +119,24 @@ class BlockCache:
         """The policy actually applied to admits (resolves ``auto``)."""
         return self._active
 
+    def gauges(self) -> "Dict[str, float]":
+        """Instantaneous gauge snapshot for the live metrics plane.
+
+        ``hit_rate`` is lifetime hits / lookups (0.0 before any lookup —
+        a gauge needs a number, and the windowed view comes from sampling
+        this repeatedly, not from NaN); ``admission_second_touch`` encodes
+        the active policy as 0/1 so a policy flip shows as a step on the
+        counter track."""
+        looked = self.hits + self.misses
+        return {
+            "hit_rate": self.hits / looked if looked else 0.0,
+            "dirty_bytes": float(self.dirty_bytes),
+            "resident_bytes": float(self.resident_bytes),
+            "evictions": float(self.evictions),
+            "admission_second_touch":
+                1.0 if self._active == "second_touch" else 0.0,
+        }
+
     def set_active_admission(self, policy: str) -> None:
         """Flip the active policy of an ``auto`` cache.  No-op unless the
         cache was configured ``admission="auto"`` — explicit policies are

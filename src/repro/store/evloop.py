@@ -39,6 +39,30 @@ Nothing here feeds back into pricing or classification: the event loop is a
 timing overlay over drains that already happened, which is what keeps the
 logical trace and the per-tier accounting bit-identical whether or not a
 service window is open.
+
+PR 8 additions, all on the interleaved path and all observational or
+explicitly opted into:
+
+* **per-tier queue depths** — ``queue_depths={"nvme": 64, "s3": 8}``
+  overrides the shared depth per device name (serial pricing and the
+  lone-job degeneration contract hold per tier);
+* **live metrics plane** — pass a :class:`~repro.obs.MetricsPlane` and the
+  loop samples per-tier utilization / outstanding-window occupancy /
+  pipe-backlog gauges at round boundaries and ``jobs.in_flight`` at
+  arrival/completion, all on the virtual clock.  Sampling is read-only:
+  completions are bit-identical with the plane on or off (tested);
+* **SLO hook** — pass a :class:`~repro.obs.SLOMonitor` and every job
+  completion feeds its tenant's burn-rate windows as it lands;
+* **fault injection** — :class:`~repro.core.io_sim.Degradation` entries on
+  a tier's :class:`DeviceModel` stretch that tier's round latency and pipe
+  drain while active.  Only the interleaved loop consults the fault
+  schedule; serial pricing and the accounting plane never see it, so
+  committed baselines stay bit-identical while the serve bench degrades
+  NVMe mid-run and gates the SLO alert;
+* **closed-loop arrivals** — a job with ``after=<job>`` is held until its
+  dependency completes, then arrives ``think`` virtual seconds later
+  (the :class:`ServiceWindow` wires per-client chains; see
+  ``repro.serve.workload`` for the coordinated-omission caveat).
 """
 
 from __future__ import annotations
@@ -51,6 +75,7 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 from ..core.io_sim import DeviceModel
 from ..obs.metrics import percentile
+from ..obs.timeseries import NULL_PLANE, MetricsPlane
 from .stats import DrainRecord
 
 __all__ = ["QoS", "Job", "JobCompletion", "ServiceResult", "ServiceWindow",
@@ -109,12 +134,13 @@ class Job:
     (phase-major, fastest tier first within a phase) plus serving metadata."""
 
     __slots__ = ("label", "tenant", "weight", "request", "n_requests",
-                 "submit", "seq", "units", "_next")
+                 "submit", "seq", "units", "_next", "after", "think")
 
     def __init__(self, label: str, tenant: str = "default",
                  weight: Optional[float] = None,
                  request: Optional[str] = None, n_requests: int = 0,
-                 submit: float = 0.0, seq: int = 0):
+                 submit: float = 0.0, seq: int = 0,
+                 after: Optional["Job"] = None, think: float = 0.0):
         self.label = label
         self.tenant = tenant
         self.weight = weight
@@ -124,17 +150,28 @@ class Job:
         self.seq = int(seq)
         self.units: List[_Unit] = []
         self._next = 0
+        # closed-loop dependency: this job arrives `think` virtual seconds
+        # after `after` completes (if `after` is in the same run), instead
+        # of at its nominal `submit` time.
+        self.after = after
+        self.think = float(think)
 
-    def serial_time(self, queue_depth: int) -> float:
+    def serial_time(self, queue_depth: int,
+                    queue_depths: Optional[Dict[str, int]] = None) -> float:
         """The job's old-world price: every unit strictly sequential —
         ``sum(ceil(ops/qd) * latency + pipe)`` over the chain, which is
-        exactly ``TierStats.model_time`` restricted to this one drain."""
-        qd = max(1, int(queue_depth))
+        exactly ``TierStats.model_time`` restricted to this one drain.
+        ``queue_depths`` overrides the shared depth per device name, the
+        same per-tier fallback rule as the event loop."""
+        qd0 = max(1, int(queue_depth))
         t = 0.0
         # accumulate per tier in chain order so the float summation order
         # matches model_time's (tp first, then the phase latency terms)
         per_tier: Dict[int, Tuple[float, float]] = {}
         for u in self.units:
+            qd = qd0
+            if queue_depths:
+                qd = max(1, int(queue_depths.get(u.dev.name, qd0)))
             tp, lat = per_tier.get(u.tier, (0.0, 0.0))
             per_tier[u.tier] = (tp + u.pipe,
                                 lat + math.ceil(u.ops / qd) * u.dev.latency)
@@ -258,7 +295,8 @@ class _TierState:
     bandwidth pipe."""
 
     __slots__ = ("dev", "pending", "in_round", "granted", "busy",
-                 "pipe_free", "rounds", "max_outstanding", "served")
+                 "pipe_free", "rounds", "max_outstanding", "served",
+                 "busy_time", "round_start", "last_t", "last_busy")
 
     def __init__(self, dev: DeviceModel):
         self.dev = dev
@@ -270,6 +308,10 @@ class _TierState:
         self.rounds = 0
         self.max_outstanding = 0
         self.served: Dict[str, int] = {}    # tenant -> ops served (for WFQ)
+        self.busy_time = 0.0                # cumulative round-in-flight time
+        self.round_start = 0.0
+        self.last_t = 0.0                   # utilization-sampling anchors
+        self.last_busy = 0.0
 
 
 class EventLoop:
@@ -284,10 +326,24 @@ class EventLoop:
     no accounting state and can be re-run on the same job list."""
 
     def __init__(self, devices: Sequence[DeviceModel], queue_depth: int = 256,
-                 qos: Optional[QoS] = None):
+                 qos: Optional[QoS] = None,
+                 queue_depths: Optional[Dict[str, int]] = None,
+                 plane: MetricsPlane = NULL_PLANE, slo=None):
         self.devices = list(devices)
         self.queue_depth = max(1, int(queue_depth))
         self.qos = qos or QoS()
+        # per-device-name depth overrides; any device not named falls back
+        # to the shared queue_depth
+        self.queue_depths = ({name: max(1, int(v))
+                              for name, v in queue_depths.items()}
+                             if queue_depths else None)
+        self.plane = plane if plane is not None else NULL_PLANE
+        self.slo = slo
+
+    def qd_for(self, dev: DeviceModel) -> int:
+        if self.queue_depths:
+            return self.queue_depths.get(dev.name, self.queue_depth)
+        return self.queue_depth
 
     # -- public entry points --------------------------------------------------
     def run(self, jobs: Sequence[Job], mode: str = "interleaved") -> ServiceResult:
@@ -300,15 +356,32 @@ class EventLoop:
     # -- serial baseline ------------------------------------------------------
     def _run_serial(self, jobs: Sequence[Job]) -> ServiceResult:
         """The old drain-the-whole-batch-then-return world: jobs run FIFO in
-        (submit, seq) order, each paying its full serial-drain price."""
+        (submit, seq) order, each paying its full serial-drain price.
+
+        Deliberately blind to device fault schedules and to the metrics
+        plane: serial pricing is the accounting baseline the bench gate
+        pins, so it must stay bit-identical regardless of injected
+        degradations or sampling.  Closed-loop dependencies are honoured
+        (the dependent issues when its dependency completes plus think
+        time) so both modes price the same arrival process."""
         clock = 0.0
         completions: List[JobCompletion] = []
-        for job in sorted(jobs, key=lambda j: (j.submit, j.seq)):
-            start = max(clock, job.submit)
-            clock = start + job.serial_time(self.queue_depth)
+        ordered = sorted(jobs, key=lambda j: (j.submit, j.seq))
+        ids = {id(j) for j in ordered}
+        done: Dict[int, float] = {}
+        for job in ordered:
+            submit = job.submit
+            if job.after is not None and id(job.after) in ids:
+                # the window submits dependencies before dependents, so the
+                # dependency sorts first and its completion time is known
+                submit = max(submit, done.get(id(job.after), 0.0) + job.think)
+            start = max(clock, submit)
+            clock = start + job.serial_time(self.queue_depth,
+                                            self.queue_depths)
+            done[id(job)] = clock
             completions.append(JobCompletion(
                 job.label, job.tenant, job.request, job.n_requests,
-                job.submit, clock))
+                submit, clock))
         return ServiceResult("serial", completions, {})
 
     # -- interleaved event loop -----------------------------------------------
@@ -316,23 +389,52 @@ class EventLoop:
         tiers = [_TierState(dev) for dev in self.devices]
         heap: List[Tuple[float, int, int, object]] = []
         eseq = 0  # heap tie-break: deterministic FIFO among equal timestamps
+        plane, slo = self.plane, self.slo
 
         def push(t: float, kind: int, payload) -> None:
             nonlocal eseq
             eseq += 1
             heapq.heappush(heap, (t, kind, eseq, payload))
 
+        ordered = sorted(jobs, key=lambda j: (j.submit, j.seq))
+        ids = {id(j) for j in ordered}
+        # closed-loop dependents wait for their dependency's completion
+        # instead of arriving at their nominal submit time
+        deps: Dict[int, List[Job]] = {}
+        # effective issue time per job (dependents: dep completion + think);
+        # kept out of Job.submit so repeated runs stay pure
+        esub: Dict[int, float] = {}
         useq = 0
-        for job in sorted(jobs, key=lambda j: (j.submit, j.seq)):
+        for job in ordered:
             job._next = 0
             for u in job.units:
                 useq += 1
                 u.seq = useq
                 u.ops_left = u.ops
                 u.wait_rounds = 0
-            push(job.submit, 0, job)  # kind 0: arrival
+            if job.after is not None and id(job.after) in ids:
+                deps.setdefault(id(job.after), []).append(job)
+            else:
+                esub[id(job)] = job.submit
+                push(job.submit, 0, job)  # kind 0: arrival
 
         completions: List[JobCompletion] = []
+        in_flight = 0
+
+        def complete(job: Job, t: float) -> None:
+            nonlocal in_flight
+            submit = esub[id(job)]
+            completions.append(JobCompletion(
+                job.label, job.tenant, job.request, job.n_requests,
+                submit, t))
+            in_flight -= 1
+            plane.sample("jobs.in_flight", t, in_flight)
+            plane.observe_latency(f"latency.{job.tenant}", t, t - submit)
+            if slo is not None:
+                slo.observe(job.tenant, t, t - submit)
+            for d in deps.pop(id(job), ()):
+                at = esub[id(d)] = max(d.submit, t + d.think)
+                push(at, 0, d)
 
         def activate(unit: _Unit, t: float) -> None:
             ts = tiers[unit.tier]
@@ -353,13 +455,14 @@ class EventLoop:
             return key
 
         def start_round(ts: _TierState, t: float) -> None:
-            """Pack the next outstanding window: up to queue_depth ops drawn
-            from all pending units in QoS order."""
+            """Pack the next outstanding window: up to the tier's queue
+            depth ops drawn from all pending units in QoS order."""
             if not ts.pending:
                 ts.busy = False
                 return
             order = sorted(ts.pending, key=order_key(ts))
-            slots = self.queue_depth
+            qd = self.qd_for(ts.dev)
+            slots = qd
             chosen: List[_Unit] = []
             passed: List[_Unit] = []
             granted: Dict[int, int] = {}
@@ -390,22 +493,48 @@ class EventLoop:
             ts.granted = granted
             ts.busy = True
             ts.rounds += 1
-            ts.max_outstanding = max(ts.max_outstanding,
-                                     self.queue_depth - slots)
-            push(t + ts.dev.latency, 1, ts)  # kind 1: round completion
+            outstanding = qd - slots
+            ts.max_outstanding = max(ts.max_outstanding, outstanding)
+            ts.round_start = t
+            # fault schedule: an active degradation stretches this round's
+            # trip time; healthy devices take the branch-free path
+            lat = ts.dev.latency
+            if ts.dev.faults:
+                lat *= ts.dev.latency_factor_at(t)
+            if plane.enabled:
+                plane.sample(f"tier.{ts.dev.name}.outstanding", t,
+                             outstanding)
+            push(t + lat, 1, ts)  # kind 1: round completion
 
         def finish_round(ts: _TierState, t: float) -> None:
+            ts.busy_time += t - ts.round_start
+            faulted = bool(ts.dev.faults)
             for u in ts.in_round:
                 if u.ops_left == 0:
                     # all this unit's ops have completed their round trips;
                     # its bytes drain through the FCFS bandwidth pipe
-                    ts.pipe_free = max(ts.pipe_free, t) + u.pipe
+                    pipe = u.pipe
+                    if faulted:
+                        pipe /= ts.dev.bandwidth_factor_at(t)
+                    ts.pipe_free = max(ts.pipe_free, t) + pipe
                     push(ts.pipe_free, 2, u)  # kind 2: unit completion
                 else:
                     ts.pending.append(u)
             ts.in_round = []
             ts.granted = {}
             ts.busy = False
+            if plane.enabled:
+                # utilization = fraction of virtual time this tier had a
+                # round in flight since the last sample; pipe backlog is the
+                # queued-bytes drain horizon in virtual seconds
+                dt = t - ts.last_t
+                if dt > 0:
+                    plane.sample(f"tier.{ts.dev.name}.utilization", t,
+                                 min(1.0, (ts.busy_time - ts.last_busy) / dt))
+                    ts.last_t = t
+                    ts.last_busy = ts.busy_time
+                plane.sample(f"tier.{ts.dev.name}.pipe_backlog", t,
+                             max(0.0, ts.pipe_free - t))
             if ts.pending:
                 start_round(ts, t)
 
@@ -415,20 +544,18 @@ class EventLoop:
             if job._next < len(job.units):
                 activate(job.units[job._next], t)
             else:
-                completions.append(JobCompletion(
-                    job.label, job.tenant, job.request, job.n_requests,
-                    job.submit, t))
+                complete(job, t)
 
         while heap:
             t, kind, _, payload = heapq.heappop(heap)
             if kind == 0:
                 job = payload
+                in_flight += 1
+                plane.sample("jobs.in_flight", t, in_flight)
                 if job.units:
                     activate(job.units[0], t)
                 else:
-                    completions.append(JobCompletion(
-                        job.label, job.tenant, job.request, job.n_requests,
-                        job.submit, t))
+                    complete(job, t)
             elif kind == 1:
                 finish_round(payload, t)
             else:
@@ -446,6 +573,9 @@ class _RequestCtx:
     at: Optional[float]
     weight: Optional[float]
     request: Optional[str]
+    client: Optional[str] = None
+    think: float = 0.0
+    dep: Optional[Job] = None  # the client's previous request's last job
 
 
 class ServiceWindow:
@@ -467,6 +597,7 @@ class ServiceWindow:
         self.jobs: List[Job] = []
         self._cur: Optional[_RequestCtx] = None
         self._arrival = 0.0  # default submit time for untagged drains
+        self._last_by_client: Dict[str, Job] = {}  # closed-loop chain heads
 
     def __enter__(self) -> "ServiceWindow":
         if self.scheduler._window is not None:
@@ -480,14 +611,24 @@ class ServiceWindow:
     @contextlib.contextmanager
     def request(self, tenant: str = "default", at: Optional[float] = None,
                 weight: Optional[float] = None,
-                request: Optional[str] = None):
+                request: Optional[str] = None,
+                client: Optional[str] = None, think: float = 0.0):
         """Tag every drain produced inside the block as one tenant request
         arriving at virtual time ``at`` (defaults to the latest arrival seen,
-        so untimed requests land back to back)."""
+        so untimed requests land back to back).
+
+        ``client`` opts the request into the closed-loop arrival model: its
+        jobs depend on the *last job of the same client's previous request*
+        and arrive ``think`` virtual seconds after that job completes (a
+        client issues its next request only after the previous response
+        lands — the chain approximates request completion by its last
+        submitted drain).  Open-loop requests just set ``at``."""
         if at is not None:
             self._arrival = float(at)
         prev = self._cur
-        self._cur = _RequestCtx(tenant, self._arrival, weight, request)
+        dep = self._last_by_client.get(client) if client else None
+        self._cur = _RequestCtx(tenant, self._arrival, weight, request,
+                                client=client, think=float(think), dep=dep)
         try:
             yield
         finally:
@@ -501,15 +642,28 @@ class ServiceWindow:
             job.submit = ctx.at if ctx.at is not None else self._arrival
             if ctx.request is not None:
                 job.request = ctx.request
+            if ctx.client is not None:
+                job.after = ctx.dep
+                job.think = ctx.think
+                self._last_by_client[ctx.client] = job
         else:
             job.submit = self._arrival
         self.jobs.append(job)
 
     def run(self, mode: str = "interleaved", qos: Optional[QoS] = None,
-            queue_depth: Optional[int] = None) -> ServiceResult:
+            queue_depth: Optional[int] = None,
+            queue_depths: Optional[Dict[str, int]] = None,
+            plane: MetricsPlane = NULL_PLANE, slo=None) -> ServiceResult:
         """Price the captured jobs; pure — callable repeatedly, with either
-        mode, without touching scheduler or store state."""
+        mode, without touching scheduler or store state.  ``plane``/``slo``
+        attach the live metrics plane and SLO monitor to the interleaved
+        run; ``queue_depths`` overrides depth per device name (defaulting
+        to the scheduler's per-tier map, if it has one)."""
         loop = EventLoop(self.scheduler._devices(),
                          queue_depth or self.scheduler.queue_depth,
-                         qos or self.qos)
+                         qos or self.qos,
+                         queue_depths=(queue_depths if queue_depths is not None
+                                       else getattr(self.scheduler,
+                                                    "queue_depths", None)),
+                         plane=plane, slo=slo)
         return loop.run(self.jobs, mode=mode)

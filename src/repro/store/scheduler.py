@@ -39,6 +39,7 @@ from ..core.io_sim import (
     merge_phase_extents,
     trace_stats,
 )
+from ..obs.timeseries import NULL_PLANE, MetricsPlane
 from ..obs.trace import NULL_TRACER
 from .cache import BlockCache
 from .evloop import JobCompletion, QoS, ServiceWindow, build_job
@@ -513,9 +514,19 @@ class IOScheduler:
         queue_depth: int = 256,
         readahead: Union[str, None, SequentialReadahead] = "auto",
         tracer=None,
+        queue_depths: Optional[Dict[str, int]] = None,
+        plane: MetricsPlane = NULL_PLANE,
     ):
         self.store = store
         self.queue_depth = int(queue_depth)
+        # per-device-name depth overrides (e.g. {"nvme": 64, "s3": 8});
+        # unnamed devices fall back to the shared queue_depth.  Used by
+        # serial pricing here and inherited by ServiceWindow.run().
+        self.queue_depths = dict(queue_depths) if queue_depths else None
+        # live metrics plane: store-side gauges (cache hit rate, dirty
+        # bytes, admission state) sampled at batch close on the virtual
+        # clock.  NULL_PLANE (the default) collects nothing.
+        self.plane = plane if plane is not None else NULL_PLANE
         if readahead == "auto":
             readahead = SequentialReadahead() if store.levels else None
         self.readahead = readahead or None
@@ -598,7 +609,8 @@ class IOScheduler:
             if win is not None:
                 win._submit(job)
             else:
-                done = self.vclock + job.serial_time(self.queue_depth)
+                done = self.vclock + job.serial_time(self.queue_depth,
+                                                     self.queue_depths)
                 self.completions.append(JobCompletion(
                     rec.label, job.tenant, request, rec.n_requests,
                     self.vclock, done))
@@ -634,6 +646,8 @@ class IOScheduler:
             self._ingest_drains(n0, request=batch.request)
         if tr.enabled:
             self._sample_counters()
+        if self.plane.enabled:
+            self._sample_plane()
 
     def _finish(self, batch: ReadBatch) -> None:
         tr = self.tracer
@@ -701,6 +715,8 @@ class IOScheduler:
             self._ingest_drains(n0, request=batch.request)
         if tr.enabled:
             self._sample_counters()
+        if self.plane.enabled:
+            self._sample_plane()
 
     def _sample_counters(self) -> None:
         """One sample per counter track at batch close (traced runs only)."""
@@ -718,6 +734,20 @@ class IOScheduler:
             "n_write_batches": self.n_write_batches,
             "drains": len(self.store.drain_log),
         })
+
+    def _sample_plane(self) -> None:
+        """Store-side gauges into the live metrics plane at batch close,
+        timestamped on the virtual clock (inside an open service window the
+        store's vclock does not advance, so the window's latest arrival
+        time stands in — the batch closed while that request was being
+        served)."""
+        win = self._window
+        t = win._arrival if win is not None else self.vclock
+        plane = self.plane
+        for lvl in self.store.levels:
+            for key, v in lvl.cache.gauges().items():
+                plane.sample(f"cache.{lvl.stats.name}.{key}", t, v)
+        plane.sample("scheduler.drains", t, len(self.store.drain_log))
 
     # -- accounting ----------------------------------------------------------
     def stats(self, coalesce_gap: int = 0) -> IOStats:

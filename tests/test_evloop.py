@@ -368,7 +368,7 @@ def test_drive_prices_same_workload_under_both_models():
                TenantSpec("s", share=2.0, rows_per_request=16)]
     wl = ZipfWorkload(w.n_rows, tenants, n_requests=40,
                       arrival_rate=500.0, seed=4)
-    inter, serial = drive(w, "c", wl.generate(), qos=wl.qos())
+    inter, serial, _win = drive(w, "c", wl.generate(), qos=wl.qos())
     assert len(inter.completions) == len(serial.completions) == 40
     assert inter.makespan <= serial.makespan * (1 + 1e-12)
     summ = tenant_summary(inter, ["p", "s"])

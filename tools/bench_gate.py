@@ -15,6 +15,10 @@ code they reproduce bit-for-bit, so the gate can be strict:
   segment, e.g. the serving plane's per-tenant latency summaries) are
   modelled, not measured — they follow the strict rules above even when the
   key also contains a rate-marker substring;
+* ``slo.*`` metrics (objectives, breach counters, detection delays, burn
+  rates — anything under an ``slo`` path segment or an ``slo_``-prefixed
+  key) are virtual-clock outputs: always strict, never rate-skipped — a
+  drifted detection delay is a regression of the monitoring plane itself;
 * wall-clock and throughput numbers (``rows_per_s``, ``cpu_decode_s``,
   speedups) are machine noise and are ignored unless ``--rates`` opts in,
   which checks them only within a loose ``--rate-tol`` band.
@@ -56,11 +60,20 @@ RATE_EXACT = frozenset({"scan_s"})
 # floats 1e-6) even when the key also carries a rate marker — e.g.
 # "p99_speedup_serial_over_interleaved" is a modelled ratio, not wall clock.
 PCT_RE = re.compile(r"(?:^|_)p\d+(?:_|$)")
+# SLO subsystem outputs (breach counters, detection delays, burn thresholds,
+# dotted slo.* counter names) are deterministic virtual-clock metrics: any
+# path that enters an "slo" segment — or a key prefixed "slo_"/"slo." — is
+# compared strictly regardless of rate-marker substrings.
+SLO_RE = re.compile(r"(?:^|\.)slo[._]|(?:^|\.)slo$")
 FLOAT_RTOL = 1e-6
 
 
 def _is_percentile_key(key: str) -> bool:
     return PCT_RE.search(key.lower()) is not None
+
+
+def _is_slo_path(path: str) -> bool:
+    return SLO_RE.search(path.lower()) is not None
 
 
 def _is_rate_key(key: str) -> bool:
@@ -98,7 +111,8 @@ def compare(baseline, current, *, rates: bool = False,
     # first — a modelled percentile stays strict even if its name happens to
     # contain a rate-marker substring.
     leaf_key = path.rsplit(".", 1)[-1]
-    if not _is_percentile_key(leaf_key) and _is_rate_key(leaf_key):
+    if not _is_percentile_key(leaf_key) and not _is_slo_path(path) \
+            and _is_rate_key(leaf_key):
         if rates and isinstance(baseline, (int, float)) \
                 and isinstance(current, (int, float)) and baseline:
             rel = abs(current - baseline) / abs(baseline)

@@ -1,0 +1,159 @@
+#!/usr/bin/env python
+"""Append each benchmark run's headline metrics to ``BENCH_TRAJECTORY.jsonl``.
+
+The bench artifacts (``BENCH_*.json``) are per-run snapshots; the gate
+(:mod:`tools.bench_gate`) pins them against committed baselines, but neither
+answers "how did the headline move across the last N commits".  This tool is
+the missing trajectory: one JSON line per run, carrying
+
+* the run provenance every artifact already stamps (``meta.run``: git sha,
+  timestamp, store spec, smoke flag) — the sha/timestamp come from the
+  artifact, **not** from the clock at append time, so replaying old
+  artifacts reconstructs history faithfully;
+* every artifact's ``headline`` subtree (the numbers each bench declares
+  to be its point), keyed by bench name.
+
+Appending is idempotent per (git_sha, smoke, benches) triple: re-running CI
+on the same commit updates nothing unless ``--force`` is given, so the file
+stays one line per distinct run instead of one per retry.  Lines are
+self-contained JSON objects (JSONL), NaN-free by construction (the dump
+site refuses NaN), and safe to commit or upload as a CI artifact.
+
+Usage::
+
+    python benchmarks/run.py --smoke take serve ...
+    python tools/bench_history.py                    # appends one line
+    python tools/bench_history.py --print            # dump the trajectory
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+import sys
+from typing import Dict, List, Optional
+
+DEFAULT_OUT = "BENCH_TRAJECTORY.jsonl"
+
+
+def collect(current_dir: str = ".",
+            names: Optional[List[str]] = None) -> Optional[Dict]:
+    """Fold the current directory's BENCH_*.json into one trajectory row.
+
+    Returns ``None`` when no artifacts are present.  ``meta.run`` is taken
+    from the first artifact (all artifacts of one run stamp the same run
+    metadata); each artifact contributes its ``headline`` subtree under its
+    bench name (``BENCH_serve.json`` -> ``serve``) plus, when present, the
+    SLO detection summary — the serving plane's monitoring headline."""
+    if names:
+        paths = [os.path.join(current_dir, n) for n in names]
+    else:
+        paths = sorted(glob.glob(os.path.join(current_dir, "BENCH_*.json")))
+    paths = [p for p in paths if os.path.exists(p)]
+    if not paths:
+        return None
+    row: Dict = {"run": None, "benches": {}}
+    for p in paths:
+        with open(p) as f:
+            art = json.load(f)
+        bench = os.path.basename(p)[len("BENCH_"):-len(".json")]
+        run = (art.get("meta") or {}).get("run")
+        if row["run"] is None and run:
+            row["run"] = run
+        entry: Dict = {}
+        if "headline" in art:
+            entry["headline"] = art["headline"]
+        slo = art.get("slo")
+        if isinstance(slo, dict):
+            deg = slo.get("degraded") or {}
+            entry["slo"] = {
+                "detection_delay_s": deg.get("detection_delay_s"),
+                "breaches": deg.get("breaches"),
+                "healthy_breaches": slo.get("healthy_breaches"),
+            }
+        if entry:
+            row["benches"][bench] = entry
+    return row if row["benches"] else None
+
+
+def _same_run(a: Dict, b: Dict) -> bool:
+    ra, rb = a.get("run") or {}, b.get("run") or {}
+    return (ra.get("git_sha") == rb.get("git_sha")
+            and ra.get("smoke") == rb.get("smoke")
+            and sorted(a.get("benches", {})) == sorted(b.get("benches", {})))
+
+
+def append(row: Dict, out_path: str = DEFAULT_OUT,
+           force: bool = False) -> bool:
+    """Append ``row`` unless the last line already records the same run
+    (same git sha + smoke flag + bench set).  Returns True if written."""
+    last = None
+    if os.path.exists(out_path):
+        with open(out_path) as f:
+            for line in f:
+                line = line.strip()
+                if line:
+                    last = line
+    if last is not None and not force:
+        try:
+            if _same_run(json.loads(last), row):
+                return False
+        except json.JSONDecodeError:
+            pass  # corrupt tail: append anyway, history stays readable
+    with open(out_path, "a") as f:
+        json.dump(row, f, sort_keys=True, allow_nan=False)
+        f.write("\n")
+    return True
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("names", nargs="*",
+                    help="specific BENCH_*.json basenames (default: all in "
+                         "--current)")
+    ap.add_argument("--current", default=".",
+                    help="directory holding the fresh artifacts")
+    ap.add_argument("--out", default=DEFAULT_OUT,
+                    help=f"trajectory file to append to (default "
+                         f"{DEFAULT_OUT})")
+    ap.add_argument("--force", action="store_true",
+                    help="append even if the last line records the same run")
+    ap.add_argument("--print", dest="show", action="store_true",
+                    help="pretty-print the existing trajectory and exit")
+    args = ap.parse_args(argv)
+    if args.show:
+        if not os.path.exists(args.out):
+            print(f"bench_history: no trajectory at {args.out}")
+            return 1
+        with open(args.out) as f:
+            for line in f:
+                line = line.strip()
+                if not line:
+                    continue
+                row = json.loads(line)
+                run = row.get("run") or {}
+                heads = []
+                for bench, entry in sorted(row.get("benches", {}).items()):
+                    hl = entry.get("headline") or {}
+                    nums = [f"{k}={v}" for k, v in sorted(hl.items())
+                            if isinstance(v, (int, float))][:3]
+                    heads.append(f"{bench}({', '.join(nums)})")
+                print(f"{run.get('git_sha')} {run.get('timestamp')} "
+                      f"smoke={run.get('smoke')}: {'; '.join(heads)}")
+        return 0
+    row = collect(args.current, args.names or None)
+    if row is None:
+        print("bench_history: no BENCH_*.json artifacts found", file=sys.stderr)
+        return 1
+    wrote = append(row, args.out, force=args.force)
+    n_benches = len(row["benches"])
+    sha = (row.get("run") or {}).get("git_sha")
+    print(f"bench_history: {'appended' if wrote else 'unchanged'} "
+          f"({n_benches} benches, sha={sha}) -> {args.out}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,151 @@
+#!/usr/bin/env python
+"""Terminal dashboard over a serve-bench artifact: per-tier sparklines from
+the metrics plane's gauge series plus the tenant SLO table.
+
+Reads the JSON the benchmark embeds (``metrics_plane`` = the
+:meth:`~repro.obs.MetricsPlane.export` form, ``slo`` = the monitor's
+summary) and renders plain text — no dependencies, safe to run in CI and
+upload as an artifact next to the trace.  Sparklines use the usual eighth-
+block ramp; scales are printed alongside so the glyphs stay honest.
+
+Usage::
+
+    python benchmarks/run.py --smoke serve
+    python tools/obs_report.py BENCH_serve.json
+    python tools/obs_report.py BENCH_serve.json --out OBS_REPORT.txt
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from typing import Dict, List, Optional
+
+SPARKS = "▁▂▃▄▅▆▇█"
+
+
+def sparkline(values: List[float], width: int = 48,
+              lo: Optional[float] = None,
+              hi: Optional[float] = None) -> str:
+    """Render ``values`` as a fixed-width sparkline (resampled by stride).
+
+    ``lo``/``hi`` pin the scale (e.g. 0..1 for utilization) so two lines
+    are visually comparable; by default the series' own range is used."""
+    if not values:
+        return ""
+    if len(values) > width:
+        step = len(values) / width
+        values = [values[min(int(i * step), len(values) - 1)]
+                  for i in range(width)]
+    vlo = min(values) if lo is None else lo
+    vhi = max(values) if hi is None else hi
+    span = vhi - vlo
+    if span <= 0:
+        return SPARKS[0] * len(values)
+    out = []
+    for v in values:
+        k = int((v - vlo) / span * (len(SPARKS) - 1))
+        out.append(SPARKS[max(0, min(k, len(SPARKS) - 1))])
+    return "".join(out)
+
+
+def _fmt(v, nd: int = 3) -> str:
+    if v is None:
+        return "-"
+    if isinstance(v, float):
+        return f"{v:.{nd}f}"
+    return str(v)
+
+
+def render(artifact: Dict) -> str:
+    """The full text report for one artifact."""
+    lines: List[str] = []
+    run = (artifact.get("meta") or {}).get("run") or {}
+    lines.append(f"obs report · sha={run.get('git_sha')} "
+                 f"smoke={run.get('smoke')} ts={run.get('timestamp')}")
+    plane = artifact.get("metrics_plane") or {}
+    series: Dict[str, Dict] = plane.get("series") or {}
+    if series:
+        lines.append("")
+        lines.append("gauge series (virtual clock)")
+        width = max(len(name) for name in series)
+        for name in sorted(series):
+            s = series[name]
+            vs = s.get("v") or []
+            if not vs:
+                continue
+            pinned = name.endswith(".utilization")
+            spark = sparkline(vs, lo=0.0 if pinned else None,
+                              hi=1.0 if pinned else None)
+            lines.append(f"  {name:<{width}}  {spark}  "
+                         f"last={_fmt(vs[-1])} max={_fmt(max(vs))} "
+                         f"n={s.get('n_samples', len(vs))}")
+    lat = plane.get("latency") or {}
+    if lat:
+        lines.append("")
+        lines.append("windowed latency (log-bucket, live horizon)")
+        for name in sorted(lat):
+            s = lat[name]
+            lines.append(f"  {name}: n={s.get('count')} "
+                         f"p50={_fmt(s.get('p50'), 5)} "
+                         f"p99={_fmt(s.get('p99'), 5)} "
+                         f"max={_fmt(s.get('max'), 5)} s")
+    slo = artifact.get("slo") or {}
+    table = (slo.get("degraded") or {}).get("table") or []
+    if table:
+        lines.append("")
+        deg = slo.get("degraded") or {}
+        lines.append(f"tenant SLO (degradation at "
+                     f"t={_fmt(deg.get('t_degradation_s'))}s, premium alert "
+                     f"+{_fmt(deg.get('detection_delay_s'))}s)")
+        hdr = (f"  {'tenant':<10} {'slo_ms':>9} {'target':>7} {'reqs':>6} "
+               f"{'bad':>5} {'bad%':>7} {'breach':>7} {'alert_t':>9}")
+        lines.append(hdr)
+        for row in table:
+            bf = row.get("bad_fraction")
+            lines.append(
+                f"  {row.get('tenant', '?'):<10} "
+                f"{_fmt(row.get('objective_ms')):>9} "
+                f"{_fmt(row.get('target'), 2):>7} "
+                f"{row.get('requests', 0):>6} "
+                f"{row.get('bad', 0):>5} "
+                f"{(_fmt(bf * 100, 1) + '%') if bf is not None else '-':>7} "
+                f"{row.get('breaches', 0):>7} "
+                f"{_fmt(row.get('first_alert_t')):>9}")
+    counters = plane.get("counters") or {}
+    breaches = {k: v for k, v in counters.items()
+                if k.startswith("slo.breach.")}
+    if breaches:
+        lines.append("")
+        lines.append("breach counters: " + ", ".join(
+            f"{k}={v}" for k, v in sorted(breaches.items())))
+    if len(lines) == 1:
+        lines.append("(artifact carries no metrics_plane/slo sections)")
+    return "\n".join(lines) + "\n"
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("artifact", nargs="?", default="BENCH_serve.json",
+                    help="bench artifact with metrics_plane/slo sections")
+    ap.add_argument("--out", default=None,
+                    help="also write the report to this path")
+    args = ap.parse_args(argv)
+    try:
+        with open(args.artifact) as f:
+            artifact = json.load(f)
+    except OSError as e:
+        print(f"obs_report: cannot read {args.artifact}: {e}",
+              file=sys.stderr)
+        return 1
+    text = render(artifact)
+    sys.stdout.write(text)
+    if args.out:
+        with open(args.out, "w") as f:
+            f.write(text)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
