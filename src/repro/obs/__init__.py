@@ -14,14 +14,15 @@ imports at module level, so any layer can depend on ``obs``):
   histograms, virtual-clock gauge series, and the :class:`MetricsPlane`
   container (zero-cost when disabled: :data:`NULL_PLANE`).
 * :mod:`repro.obs.slo` — per-tenant latency objectives and rolling
-  multi-window error-budget burn-rate alerts (:class:`SLOMonitor`).
+  multi-window error-budget burn-rate alerts (:class:`SLOMonitor`), plus
+  the burn-driven admission :class:`Shedder` the event loop consults.
 """
 
 from .attrib import Attribution, DrainCost, attribute
 from .metrics import (Counter, Histogram, MetricsRegistry, percentile,
                       prometheus_text)
-from .slo import (DEFAULT_WINDOWS, BurnWindow, SLOAlert, SLObjective,
-                  SLOMonitor)
+from .slo import (DEFAULT_WINDOWS, BurnWindow, Shedder, SLOAlert,
+                  SLObjective, SLOMonitor)
 from .timeseries import (NULL_PLANE, GaugeSeries, LogBucketHistogram,
                          MetricsPlane, WindowedHistogram)
 from .trace import NULL_SPAN, NULL_TRACER, NullTracer, Tracer
@@ -44,6 +45,7 @@ __all__ = [
     "SLOAlert",
     "SLObjective",
     "SLOMonitor",
+    "Shedder",
     "Tracer",
     "WindowedHistogram",
     "attribute",

@@ -37,7 +37,7 @@ from .metrics import MetricsRegistry
 from .timeseries import MetricsPlane, NULL_PLANE
 from .trace import NULL_TRACER
 
-__all__ = ["SLObjective", "BurnWindow", "SLOAlert", "SLOMonitor",
+__all__ = ["SLObjective", "BurnWindow", "SLOAlert", "SLOMonitor", "Shedder",
            "DEFAULT_WINDOWS"]
 
 
@@ -130,19 +130,25 @@ class SLOMonitor:
         self._tenants: Dict[str, _TenantState] = {}
 
     # -- core ----------------------------------------------------------------
-    def observe(self, tenant: str, t: float, latency: float) -> None:
+    def observe(self, tenant: str, t: float, latency: float,
+                error: bool = False) -> None:
         """Record one completion at virtual time ``t`` and re-evaluate the
-        tenant's burn windows."""
+        tenant's burn windows.  ``error=True`` marks a *failed* request
+        (retries exhausted, no failover target): it consumes error budget
+        unconditionally, whatever its latency — a fast failure is still a
+        failure."""
         obj = self.objectives.get(tenant)
         if obj is None:
             return
         st = self._tenants.get(tenant)
         if st is None:
             st = self._tenants[tenant] = _TenantState(len(self.windows))
-        bad = latency > obj.latency_s
+        bad = error or latency > obj.latency_s
         st.events.append((t, bad))
         st.n_total += 1
         self.registry.counter(f"slo.requests.{tenant}").inc()
+        if error:
+            self.registry.counter(f"slo.errors.{tenant}").inc()
         if bad:
             st.bad_total += 1
             self.registry.counter(f"slo.bad.{tenant}").inc()
@@ -191,6 +197,20 @@ class SLOMonitor:
         return (bad / n) / obj.budget
 
     # -- queries -------------------------------------------------------------
+    def current_burn(self, tenant: str, t: float,
+                     window_s: Optional[float] = None) -> float:
+        """The tenant's burn rate over the trailing ``window_s`` seconds
+        ending at virtual time ``t`` (default: the first configured long
+        window).  0.0 for unknown tenants or empty windows — the query a
+        :class:`Shedder` polls at admission time."""
+        obj = self.objectives.get(tenant)
+        st = self._tenants.get(tenant)
+        if obj is None or st is None:
+            return 0.0
+        if window_s is None:
+            window_s = self.windows[0].long_s
+        return self._burn(st, t, float(window_s), obj)
+
     def first_alert(self, tenant: str) -> Optional[SLOAlert]:
         for a in self.alerts:
             if a.tenant == tenant:
@@ -222,3 +242,96 @@ class SLOMonitor:
                 "first_alert_t": first.at if first else None,
             })
         return rows
+
+
+class Shedder:
+    """SLO-driven load shedding with hysteresis.
+
+    Watches the *protected* tenants' multi-window burn through a
+    :class:`SLOMonitor` and, while any of them is burning budget faster
+    than ``on_burn`` on **both** the long and short window (the same
+    both-windows rule the alerts use: the long window proves the problem
+    is material, the short one that it is still happening), rejects
+    incoming requests from the ``shed`` tenants.  Shedding stays engaged
+    until the worst protected burn falls below ``off_burn`` — the
+    hysteresis band keeps the policy from flapping at the threshold as
+    shed load itself relieves the burn.
+
+    The event loop calls :meth:`admit` once per job arrival (on the
+    virtual clock, before the job consumes any queue slot); a rejected
+    job completes immediately with ``error="shed"`` and is *not* fed to
+    the SLO monitor — rejections are the policy's output, not evidence
+    about the protected tenants' service.  Stateful across one run: call
+    :meth:`reset` (or build a fresh instance) before re-running a window
+    so repeated runs stay pure.
+    """
+
+    def __init__(self, monitor: SLOMonitor, protect, shed,
+                 on_burn: float = 4.0, off_burn: float = 1.0,
+                 hold_s: float = 0.0,
+                 window: Optional[BurnWindow] = None):
+        if on_burn <= off_burn:
+            raise ValueError("need on_burn > off_burn (hysteresis band)")
+        if hold_s < 0:
+            raise ValueError("hold_s must be >= 0")
+        self.monitor = monitor
+        self.protect = tuple(protect)
+        self.shed = frozenset(shed)
+        if self.shed & set(self.protect):
+            raise ValueError("a tenant cannot be both protected and shed")
+        self.on_burn = float(on_burn)
+        self.off_burn = float(off_burn)
+        # hold-down: release only after the burn has stayed below off_burn
+        # for hold_s seconds.  The level band alone cannot prevent limit
+        # cycling — successful shedding drives the burn to zero while the
+        # underlying fault persists, so a pure level release re-admits the
+        # flood and re-trips; the timer makes the controller wait out the
+        # dip before trusting it.
+        self.hold_s = float(hold_s)
+        self.window = window if window is not None else monitor.windows[0]
+        self.active = False
+        self.trips = 0          # rising edges (shedding engagements)
+        self.engaged_at: List[float] = []
+        self.released_at: List[float] = []
+        self._below_since: Optional[float] = None
+
+    def reset(self) -> None:
+        """Forget the hysteresis state (for pure re-runs)."""
+        self.active = False
+        self.trips = 0
+        self.engaged_at = []
+        self.released_at = []
+        self._below_since = None
+
+    def _worst_burn(self, t: float) -> float:
+        w = self.window
+        worst = 0.0
+        for tenant in self.protect:
+            # both-windows firing burn: min(long, short) >= threshold
+            # iff both exceed it
+            b = min(self.monitor.current_burn(tenant, t, w.long_s),
+                    self.monitor.current_burn(tenant, t, w.short_s))
+            if b > worst:
+                worst = b
+        return worst
+
+    def admit(self, tenant: str, t: float) -> bool:
+        """Admission decision for one arrival at virtual time ``t``;
+        updates the hysteresis state machine as a side effect."""
+        burn = self._worst_burn(t)
+        if self.active:
+            if burn < self.off_burn:
+                if self._below_since is None:
+                    self._below_since = t
+                if t - self._below_since >= self.hold_s:
+                    self.active = False
+                    self._below_since = None
+                    self.released_at.append(t)
+            else:
+                self._below_since = None
+        elif burn >= self.on_burn:
+            self.active = True
+            self._below_since = None
+            self.trips += 1
+            self.engaged_at.append(t)
+        return not (self.active and tenant in self.shed)

@@ -40,10 +40,11 @@ from typing import Dict, List, Optional, Sequence, Tuple
 import numpy as np
 
 from ..obs.slo import SLObjective
-from ..store import QoS, ServiceResult, ServiceWindow, latency_percentiles
+from ..store import (QoS, RetryPolicy, ServiceResult, ServiceWindow,
+                     latency_percentiles)
 
 __all__ = ["TenantSpec", "ServeRequest", "ZipfWorkload", "drive",
-           "tenant_summary"]
+           "tenant_summary", "FaultScenario", "run_scenario"]
 
 
 @dataclasses.dataclass
@@ -209,6 +210,55 @@ def drive(
         interleaved = win.run("interleaved")
         serial = win.run("serial")
     return interleaved, serial, win
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultScenario:
+    """One scripted chaos scenario: fault windows stamped onto named tiers
+    of an already-executed :class:`~repro.store.ServiceWindow`, plus the
+    recovery knobs to price it with.
+
+    ``faults`` maps device name -> fault schedule (``TransientErrors``,
+    ``Blackout``, ``Degradation``, ...); a :class:`CorrelatedFault` is the
+    one-window-many-tiers convenience for the same thing.  ``retry=None``
+    keeps the window's compiled-in policy (the scheduler default);
+    ``RetryPolicy(failover=False)`` is the ablation that shows failover
+    earning its keep."""
+
+    name: str
+    faults: Tuple[Tuple[str, object], ...] = ()
+    retry: Optional[RetryPolicy] = None
+    description: str = ""
+
+    def apply(self, devices) -> List:
+        """Stamp the scenario's fault windows onto a device list (returned
+        re-built; the input models are immutable and shared)."""
+        by_name = {}
+        for name, fault in self.faults:
+            by_name.setdefault(name, []).append(fault)
+        unknown = set(by_name) - {d.name for d in devices}
+        if unknown:
+            raise ValueError(f"unknown device(s) {sorted(unknown)}")
+        out = []
+        for d in devices:
+            for fault in by_name.get(d.name, ()):
+                d = d.with_fault(fault)
+            out.append(d)
+        return out
+
+
+def run_scenario(window: ServiceWindow, scenario: FaultScenario,
+                 qos: Optional[QoS] = None, slo=None,
+                 shedder=None) -> ServiceResult:
+    """Re-price a captured service window under one fault scenario.
+
+    Pure in the window (``window.run`` never mutates captured jobs), so one
+    executed trace can be driven through a whole scenario script; the
+    ``shedder`` carries hysteresis state across a single run — rebuild or
+    ``reset()`` it per scenario."""
+    devices = scenario.apply(window.scheduler._devices())
+    return window.run("interleaved", qos=qos, devices=devices,
+                      retry=scenario.retry, slo=slo, shedder=shedder)
 
 
 def tenant_summary(result: ServiceResult, tenants: Sequence[str],

@@ -13,6 +13,7 @@ from .evloop import (  # noqa: F401
     Job,
     JobCompletion,
     QoS,
+    RetryPolicy,
     ServiceResult,
     ServiceWindow,
     build_job,

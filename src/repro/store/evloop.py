@@ -63,6 +63,39 @@ explicitly opted into:
   dependency completes, then arrives ``think`` virtual seconds later
   (the :class:`ServiceWindow` wires per-client chains; see
   ``repro.serve.workload`` for the coordinated-omission caveat).
+
+PR 9 adds the failure/recovery layer, again interleaved-only and again
+invisible on the healthy path:
+
+* **transient errors** — :class:`~repro.core.io_sim.TransientErrors` /
+  :class:`~repro.core.io_sim.Blackout` entries on a tier's fault schedule
+  fail individual ops *after they consume their round trip* (window
+  membership judged at round-completion time, draws deterministic in the
+  fault seed);
+* **retry / timeout / backoff** — a unit whose round loses ops re-queues
+  the failed slots and re-arms after a deterministic exponential backoff
+  with seeded jitter (heap kind 3), bounded by
+  :class:`RetryPolicy.max_retries` and a per-unit deadline of
+  ``timeout_k ×`` its healthy expected service time;
+* **tier failover** — a unit that exhausts retries against a faulted tier
+  is re-dispatched against the next (slower) tier, re-priced at that
+  tier's device model for the surviving slots; a unit that exhausts on
+  the last tier (or with failover disabled) fails its whole job, which
+  surfaces as a :class:`JobCompletion` with ``error`` set — never an
+  exception;
+* **load shedding** — an :class:`~repro.obs.slo.Shedder` consulted at
+  arrival can reject a job outright (``error="shed"``), trading the
+  lowest-priority tenants' admissions for the protected tenants' burn
+  rate;
+* **counters** — ``retry.<dev>``, ``failover.<dev>``, ``error.<tenant>``,
+  ``shed.<tenant>`` land in :attr:`ServiceResult.counters` (and on the
+  metrics plane when attached).
+
+The retry machinery only allocates state on tiers whose device schedule
+*can* fail ops (``DeviceModel.has_error_faults``): with no error faults —
+including ``TransientErrors(error_prob=0)`` — every run is bit-identical
+to the pre-recovery loop, which is what keeps all committed baselines
+pinned with the recovery layer compiled in.
 """
 
 from __future__ import annotations
@@ -73,13 +106,51 @@ import heapq
 import math
 from typing import Dict, List, Optional, Sequence, Tuple
 
-from ..core.io_sim import DeviceModel
+from ..core.io_sim import DeviceModel, _splitmix_uniform
 from ..obs.metrics import percentile
 from ..obs.timeseries import NULL_PLANE, MetricsPlane
 from .stats import DrainRecord
 
-__all__ = ["QoS", "Job", "JobCompletion", "ServiceResult", "ServiceWindow",
-           "EventLoop", "build_job", "latency_percentiles"]
+__all__ = ["QoS", "RetryPolicy", "Job", "JobCompletion", "ServiceResult",
+           "ServiceWindow", "EventLoop", "build_job", "latency_percentiles"]
+
+
+@dataclasses.dataclass(frozen=True)
+class RetryPolicy:
+    """Recovery knobs for the interleaved loop.
+
+    A unit whose round loses ops to an error fault re-queues the failed
+    slots and re-arms after ``backoff_base * backoff_factor**k`` seconds
+    (k = completed backoffs), stretched by up to ``jitter`` relative
+    seeded jitter — the delay is priced purely as virtual-clock time, it
+    occupies no queue slot.  The unit gives up when it has burned
+    ``max_retries`` backoffs *or* blows its deadline of ``timeout_k ×``
+    its healthy expected service time (``ceil(ops/qd)·latency + pipe``),
+    whichever comes first; deadlines are only ever checked when a failure
+    actually occurred, so they cannot perturb healthy runs.  On give-up,
+    ``failover=True`` re-dispatches the surviving slots against the next
+    (slower) tier, re-priced at that tier's model; otherwise — or when
+    already on the last tier — the whole job fails with a per-request
+    ``error``.  All draws key off ``seed``: same policy + same fault
+    schedule ⇒ bit-identical replay."""
+
+    max_retries: int = 4
+    backoff_base: float = 1e-3
+    backoff_factor: float = 2.0
+    jitter: float = 0.5
+    timeout_k: float = 8.0
+    failover: bool = True
+    seed: int = 0
+
+    def __post_init__(self):
+        if self.max_retries < 0:
+            raise ValueError("max_retries must be >= 0")
+        if self.backoff_base < 0 or self.backoff_factor < 1.0:
+            raise ValueError("need backoff_base >= 0 and backoff_factor >= 1")
+        if self.jitter < 0:
+            raise ValueError("jitter must be >= 0")
+        if self.timeout_k <= 0:
+            raise ValueError("timeout_k must be positive")
 
 
 @dataclasses.dataclass
@@ -113,7 +184,8 @@ class _Unit:
     ``pipe`` share of the tier's throughput term."""
 
     __slots__ = ("job", "tier", "phase", "dev", "ops", "nbytes", "pipe",
-                 "seq", "ops_left", "wait_rounds")
+                 "seq", "ops_left", "wait_rounds", "retry_q", "backoffs",
+                 "deadline")
 
     def __init__(self, job: "Job", tier: int, phase: int, dev: DeviceModel,
                  ops: int, nbytes: int, pipe: float):
@@ -127,6 +199,11 @@ class _Unit:
         self.seq = 0          # global arrival order, assigned at run time
         self.ops_left = 0     # per-run state (reset by EventLoop.run)
         self.wait_rounds = 0
+        # recovery state, allocated only on error-faulted tiers:
+        # (slot, attempt) pairs still owed, backoffs burned, give-up time
+        self.retry_q: Optional[List[Tuple[int, int]]] = None
+        self.backoffs = 0
+        self.deadline: Optional[float] = None
 
 
 class Job:
@@ -182,7 +259,10 @@ class Job:
 
 @dataclasses.dataclass
 class JobCompletion:
-    """One job's completion record on the virtual clock."""
+    """One job's completion record on the virtual clock.  ``error`` is
+    ``None`` for a served request, ``"shed"`` for an admission rejection,
+    or ``"io:<device>"`` when retries + failover were exhausted — failures
+    are data, never exceptions."""
 
     label: str
     tenant: str
@@ -190,10 +270,15 @@ class JobCompletion:
     n_requests: int
     submit: float
     done: float
+    error: Optional[str] = None
 
     @property
     def latency(self) -> float:
         return self.done - self.submit
+
+    @property
+    def ok(self) -> bool:
+        return self.error is None
 
 
 def build_job(
@@ -254,22 +339,46 @@ def build_job(
 
 @dataclasses.dataclass
 class ServiceResult:
-    """One event-loop (or serial-baseline) run over a set of jobs."""
+    """One event-loop (or serial-baseline) run over a set of jobs.
+
+    ``counters`` carries the recovery layer's tallies (``retry.<dev>``,
+    ``failover.<dev>``, ``error.<tenant>``, ``shed.<tenant>``) — empty on
+    healthy runs and in serial mode."""
 
     mode: str
     completions: List[JobCompletion]
     tiers: Dict[str, Dict[str, int]]
+    counters: Dict[str, int] = dataclasses.field(default_factory=dict)
 
     @property
     def makespan(self) -> float:
         return max((c.done for c in self.completions), default=0.0)
 
+    @property
+    def errors(self) -> List[JobCompletion]:
+        """Failed completions (shed and io-exhausted), submission order."""
+        return [c for c in self.completions if c.error is not None]
+
+    def availability(self, tenant: Optional[str] = None) -> float:
+        """Served fraction — completions without an error over all
+        completions (shed rejections count against availability), overall
+        or for one tenant.  1.0 when the filter matches nothing."""
+        tot = ok = 0
+        for c in self.completions:
+            if tenant is not None and c.tenant != tenant:
+                continue
+            tot += 1
+            ok += c.error is None
+        return ok / tot if tot else 1.0
+
     def percentiles(self, tenant: Optional[str] = None,
                     label_prefix: Optional[str] = None) -> Optional[Dict]:
-        """Nearest-rank per-request latency summary (seconds), optionally
-        filtered by tenant and/or drain-label prefix."""
+        """Nearest-rank per-request latency summary (seconds) over *served*
+        completions (errors excluded — an error is not a latency),
+        optionally filtered by tenant and/or drain-label prefix."""
         lats = [c.latency for c in self.completions
-                if (tenant is None or c.tenant == tenant)
+                if c.error is None
+                and (tenant is None or c.tenant == tenant)
                 and (label_prefix is None or c.label.startswith(label_prefix))]
         return latency_percentiles(lats)
 
@@ -294,8 +403,8 @@ class _TierState:
     """Per-tier run state: the outstanding-request table and the FCFS
     bandwidth pipe."""
 
-    __slots__ = ("dev", "pending", "in_round", "granted", "busy",
-                 "pipe_free", "rounds", "max_outstanding", "served",
+    __slots__ = ("dev", "pending", "in_round", "granted", "granted_slots",
+                 "busy", "pipe_free", "rounds", "max_outstanding", "served",
                  "busy_time", "round_start", "last_t", "last_busy")
 
     def __init__(self, dev: DeviceModel):
@@ -303,6 +412,9 @@ class _TierState:
         self.pending: List[_Unit] = []
         self.in_round: List[_Unit] = []
         self.granted: Dict[int, int] = {}   # unit seq -> ops in this round
+        # unit seq -> (slot, attempt) pairs in this round; only populated
+        # on error-faulted tiers under a RetryPolicy
+        self.granted_slots: Dict[int, List[Tuple[int, int]]] = {}
         self.busy = False
         self.pipe_free = 0.0
         self.rounds = 0
@@ -328,7 +440,8 @@ class EventLoop:
     def __init__(self, devices: Sequence[DeviceModel], queue_depth: int = 256,
                  qos: Optional[QoS] = None,
                  queue_depths: Optional[Dict[str, int]] = None,
-                 plane: MetricsPlane = NULL_PLANE, slo=None):
+                 plane: MetricsPlane = NULL_PLANE, slo=None,
+                 retry: Optional[RetryPolicy] = None, shedder=None):
         self.devices = list(devices)
         self.queue_depth = max(1, int(queue_depth))
         self.qos = qos or QoS()
@@ -339,6 +452,10 @@ class EventLoop:
                              if queue_depths else None)
         self.plane = plane if plane is not None else NULL_PLANE
         self.slo = slo
+        # recovery knobs; only consulted on tiers whose fault schedule can
+        # fail ops, so a policy on a healthy device list costs nothing
+        self.retry = retry
+        self.shedder = shedder
 
     def qd_for(self, dev: DeviceModel) -> int:
         if self.queue_depths:
@@ -390,11 +507,18 @@ class EventLoop:
         heap: List[Tuple[float, int, int, object]] = []
         eseq = 0  # heap tie-break: deterministic FIFO among equal timestamps
         plane, slo = self.plane, self.slo
+        policy, shedder = self.retry, self.shedder
+        counters: Dict[str, int] = {}
 
         def push(t: float, kind: int, payload) -> None:
             nonlocal eseq
             eseq += 1
             heapq.heappush(heap, (t, kind, eseq, payload))
+
+        def bump(key: str, n: int = 1) -> None:
+            counters[key] = counters.get(key, 0) + n
+            if plane.enabled:
+                plane.counter(key).inc(n)
 
         ordered = sorted(jobs, key=lambda j: (j.submit, j.seq))
         ids = {id(j) for j in ordered}
@@ -412,6 +536,9 @@ class EventLoop:
                 u.seq = useq
                 u.ops_left = u.ops
                 u.wait_rounds = 0
+                u.retry_q = None       # recovery state is strictly per-run:
+                u.backoffs = 0         # resetting it keeps repeated runs
+                u.deadline = None      # over the same jobs pure
             if job.after is not None and id(job.after) in ids:
                 deps.setdefault(id(job.after), []).append(job)
             else:
@@ -421,26 +548,76 @@ class EventLoop:
         completions: List[JobCompletion] = []
         in_flight = 0
 
-        def complete(job: Job, t: float) -> None:
+        def complete(job: Job, t: float, error: Optional[str] = None) -> None:
             nonlocal in_flight
             submit = esub[id(job)]
             completions.append(JobCompletion(
                 job.label, job.tenant, job.request, job.n_requests,
-                submit, t))
+                submit, t, error))
             in_flight -= 1
             plane.sample("jobs.in_flight", t, in_flight)
-            plane.observe_latency(f"latency.{job.tenant}", t, t - submit)
-            if slo is not None:
-                slo.observe(job.tenant, t, t - submit)
+            if error is None:
+                plane.observe_latency(f"latency.{job.tenant}", t, t - submit)
+                if slo is not None:
+                    slo.observe(job.tenant, t, t - submit)
+            else:
+                bump(f"error.{job.tenant}")
+                if slo is not None:
+                    # a failure consumes error budget whatever its latency
+                    slo.observe(job.tenant, t, t - submit, error=True)
             for d in deps.pop(id(job), ()):
                 at = esub[id(d)] = max(d.submit, t + d.think)
                 push(at, 0, d)
 
         def activate(unit: _Unit, t: float) -> None:
             ts = tiers[unit.tier]
+            if policy is not None and unit.retry_q is None \
+                    and ts.dev.has_error_faults:
+                # first dispatch against an error-faulted tier: materialize
+                # the slot queue and stamp the give-up deadline off the
+                # unit's *healthy* expected service time
+                unit.retry_q = [(s, 0) for s in range(unit.ops)]
+                qd = self.qd_for(ts.dev)
+                unit.deadline = t + policy.timeout_k * (
+                    math.ceil(unit.ops / qd) * ts.dev.latency + unit.pipe)
             ts.pending.append(unit)
             if not ts.busy:
                 start_round(ts, t)
+
+        def exhaust(unit: _Unit, ts: _TierState, t: float) -> None:
+            """Retries/deadline exhausted on this tier: fail over the
+            surviving slots to the next (slower) tier, re-priced at that
+            tier's model — or fail the whole job if there is nowhere left
+            to go."""
+            nonlocal useq
+            job = unit.job
+            nxt = unit.tier + 1
+            if policy.failover and nxt < len(self.devices):
+                bump(f"failover.{ts.dev.name}")
+                r = len(unit.retry_q)
+                dev2 = self.devices[nxt]
+                # prorate the unit's bytes over the surviving slots and
+                # price them with the target tier's model arithmetic (the
+                # same formula as build_job); cache admission is implicitly
+                # skipped — this is a timing re-dispatch, the accounting
+                # plane never sees it
+                nb = int(round(unit.nbytes * (r / unit.ops))) \
+                    if unit.ops else 0
+                avg = max(nb / r, 1.0)
+                eff = max(avg, dev2.min_read)
+                iops_limit = min(dev2.iops_4k, dev2.seq_bw / eff)
+                tp = max(r / iops_limit, nb / dev2.seq_bw)
+                v = _Unit(job, nxt, unit.phase, dev2, r, nb, tp)
+                useq += 1
+                v.seq = useq
+                v.ops_left = r
+                # v substitutes for `unit` positionally: when it drains,
+                # finish_unit advances job._next past the abandoned unit.
+                # If the target tier is itself error-faulted, activate()
+                # arms fresh retry state there (cascading failover).
+                activate(v, t)
+            else:
+                complete(job, t, error=f"io:{ts.dev.name}")
 
         def order_key(ts: _TierState):
             qos = self.qos
@@ -462,6 +639,7 @@ class EventLoop:
                 return
             order = sorted(ts.pending, key=order_key(ts))
             qd = self.qd_for(ts.dev)
+            err = policy is not None and ts.dev.has_error_faults
             slots = qd
             chosen: List[_Unit] = []
             passed: List[_Unit] = []
@@ -472,6 +650,11 @@ class EventLoop:
                     continue
                 g = min(u.ops_left, slots)
                 granted[u.seq] = g
+                if err and g:
+                    # remember which (slot, attempt) pairs ride this round
+                    # so finish_round can judge each op individually
+                    ts.granted_slots[u.seq] = u.retry_q[:g]
+                    del u.retry_q[:g]
                 u.ops_left -= g
                 u.wait_rounds = 0
                 slots -= g
@@ -509,7 +692,31 @@ class EventLoop:
         def finish_round(ts: _TierState, t: float) -> None:
             ts.busy_time += t - ts.round_start
             faulted = bool(ts.dev.faults)
+            err = policy is not None and ts.dev.has_error_faults
             for u in ts.in_round:
+                if err:
+                    # judge each op that rode this round at its completion
+                    # time: window membership + an independent seeded draw
+                    # per (tier, unit, slot, attempt)
+                    failed = [(s, a)
+                              for s, a in ts.granted_slots.get(u.seq, ())
+                              if ts.dev.op_fails_at(t, u.tier, u.seq, s, a)]
+                    if failed:
+                        u.retry_q.extend((s, a + 1) for s, a in failed)
+                        u.ops_left = len(u.retry_q)
+                        if u.backoffs >= policy.max_retries \
+                                or t >= u.deadline:
+                            exhaust(u, ts, t)
+                        else:
+                            bump(f"retry.{ts.dev.name}", len(failed))
+                            u.backoffs += 1
+                            jit = 1.0 + policy.jitter * _splitmix_uniform(
+                                policy.seed, u.tier, u.seq, u.backoffs)
+                            delay = (policy.backoff_base
+                                     * policy.backoff_factor
+                                     ** (u.backoffs - 1) * jit)
+                            push(t + delay, 3, u)  # kind 3: backoff re-arm
+                        continue
                 if u.ops_left == 0:
                     # all this unit's ops have completed their round trips;
                     # its bytes drain through the FCFS bandwidth pipe
@@ -522,6 +729,8 @@ class EventLoop:
                     ts.pending.append(u)
             ts.in_round = []
             ts.granted = {}
+            if err:
+                ts.granted_slots = {}
             ts.busy = False
             if plane.enabled:
                 # utilization = fraction of virtual time this tier had a
@@ -550,6 +759,21 @@ class EventLoop:
             t, kind, _, payload = heapq.heappop(heap)
             if kind == 0:
                 job = payload
+                if shedder is not None and not shedder.admit(job.tenant, t):
+                    # admission rejection: the job completes immediately as
+                    # shed, consumes no queue slot, and is not fed to the
+                    # SLO monitor (rejections are the policy's output, not
+                    # evidence about the protected tenants' service);
+                    # closed-loop dependents still release — a real client
+                    # retries or moves on after a 429
+                    bump(f"shed.{job.tenant}")
+                    completions.append(JobCompletion(
+                        job.label, job.tenant, job.request, job.n_requests,
+                        esub[id(job)], t, "shed"))
+                    for d in deps.pop(id(job), ()):
+                        at = esub[id(d)] = max(d.submit, t + d.think)
+                        push(at, 0, d)
+                    continue
                 in_flight += 1
                 plane.sample("jobs.in_flight", t, in_flight)
                 if job.units:
@@ -558,13 +782,15 @@ class EventLoop:
                     complete(job, t)
             elif kind == 1:
                 finish_round(payload, t)
-            else:
+            elif kind == 2:
                 finish_unit(payload, t)
+            else:
+                activate(payload, t)  # kind 3: backoff elapsed, re-queue
 
         report = {ts.dev.name: {"rounds": ts.rounds,
                                 "max_outstanding": ts.max_outstanding}
                   for ts in tiers if ts.rounds}
-        return ServiceResult("interleaved", completions, report)
+        return ServiceResult("interleaved", completions, report, counters)
 
 
 @dataclasses.dataclass
@@ -653,17 +879,29 @@ class ServiceWindow:
     def run(self, mode: str = "interleaved", qos: Optional[QoS] = None,
             queue_depth: Optional[int] = None,
             queue_depths: Optional[Dict[str, int]] = None,
-            plane: MetricsPlane = NULL_PLANE, slo=None) -> ServiceResult:
+            plane: MetricsPlane = NULL_PLANE, slo=None,
+            retry: Optional[RetryPolicy] = None, shedder=None,
+            devices: Optional[Sequence[DeviceModel]] = None) -> ServiceResult:
         """Price the captured jobs; pure — callable repeatedly, with either
         mode, without touching scheduler or store state.  ``plane``/``slo``
         attach the live metrics plane and SLO monitor to the interleaved
         run; ``queue_depths`` overrides depth per device name (defaulting
-        to the scheduler's per-tier map, if it has one)."""
-        loop = EventLoop(self.scheduler._devices(),
+        to the scheduler's per-tier map, if it has one); ``retry`` falls
+        back to the scheduler's ``retry_policy``; ``devices`` substitutes a
+        (possibly fault-injected) device list for the scheduler's — the
+        chaos bench re-prices one captured workload under many fault
+        schedules this way.  A ``shedder`` carries hysteresis state across
+        a run: reset or rebuild it between runs to keep them pure."""
+        loop = EventLoop(devices if devices is not None
+                         else self.scheduler._devices(),
                          queue_depth or self.scheduler.queue_depth,
                          qos or self.qos,
                          queue_depths=(queue_depths if queue_depths is not None
                                        else getattr(self.scheduler,
                                                     "queue_depths", None)),
-                         plane=plane, slo=slo)
+                         plane=plane, slo=slo,
+                         retry=(retry if retry is not None
+                                else getattr(self.scheduler,
+                                             "retry_policy", None)),
+                         shedder=shedder)
         return loop.run(self.jobs, mode=mode)

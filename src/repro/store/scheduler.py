@@ -42,7 +42,8 @@ from ..core.io_sim import (
 from ..obs.timeseries import NULL_PLANE, MetricsPlane
 from ..obs.trace import NULL_TRACER
 from .cache import BlockCache
-from .evloop import JobCompletion, QoS, ServiceWindow, build_job
+from .evloop import (JobCompletion, QoS, RetryPolicy, ServiceWindow,
+                     build_job)
 from .flush import FlushPolicy
 from .prefetch import SequentialReadahead
 from .stats import DrainRecord, TierStats
@@ -516,6 +517,7 @@ class IOScheduler:
         tracer=None,
         queue_depths: Optional[Dict[str, int]] = None,
         plane: MetricsPlane = NULL_PLANE,
+        retry_policy: Optional[RetryPolicy] = RetryPolicy(),
     ):
         self.store = store
         self.queue_depth = int(queue_depth)
@@ -523,6 +525,10 @@ class IOScheduler:
         # unnamed devices fall back to the shared queue_depth.  Used by
         # serial pricing here and inherited by ServiceWindow.run().
         self.queue_depths = dict(queue_depths) if queue_depths else None
+        # Recovery policy inherited by ServiceWindow.run(): compiled in by
+        # default, but only ever consulted on tiers whose fault schedule
+        # can fail ops, so healthy-path pricing stays bit-identical.
+        self.retry_policy = retry_policy
         # live metrics plane: store-side gauges (cache hit rate, dirty
         # bytes, admission state) sampled at batch close on the virtual
         # clock.  NULL_PLANE (the default) collects nothing.

@@ -40,6 +40,41 @@ def test_loader_deterministic_cursor():
         l2.close()
 
 
+def test_loader_exhausts_cleanly_after_stop():
+    fb = write_token_file(n_rows=64, seq_len=100, vocab=1000, seed=0)
+    ld = TokenLoader(fb, batch=4, seq_len=32, seed=5)
+    next(iter(ld))
+    ld.stop()
+    # once stopped, iteration ends instead of hanging on an empty queue —
+    # any prefetched batches are discarded behind the sentinel
+    with pytest.raises(StopIteration):
+        for _ in range(16):
+            next(ld)
+    # idempotent: the latch keeps raising
+    with pytest.raises(StopIteration):
+        next(ld)
+    assert not ld._thread.is_alive()
+
+
+def test_loader_killed_producer_raises_stopiteration(monkeypatch):
+    """A producer that dies mid-stream must not deadlock the consumer."""
+    import threading
+
+    monkeypatch.setattr(threading, "excepthook", lambda args: None)
+    fb = write_token_file(n_rows=64, seq_len=100, vocab=1000, seed=0)
+
+    class Dying(TokenLoader):
+        def _token_stream(self):
+            raise RuntimeError("producer crashed")
+
+    ld = Dying(fb, batch=4, seq_len=32)
+    with pytest.raises(StopIteration):
+        next(ld)
+    ld._thread.join(timeout=5.0)
+    assert not ld._thread.is_alive()
+    ld.stop()  # no-op after crash, must not raise
+
+
 def test_paged_kv_cache():
     rng = np.random.default_rng(0)
     kv = PagedKVCache(n_blocks=32, kv_features=16)

@@ -1,0 +1,428 @@
+"""Failure/recovery layer: transient-error injection, retry/timeout/backoff,
+tier failover, SLO-driven load shedding — deterministic unit tests.
+
+The tentpole contracts:
+
+* fault schedules are consulted ONLY by the interleaved timing overlay:
+  serial pricing, logical accounting, and any run without error-capable
+  faults (including ``TransientErrors(error_prob=0)``) are bit-identical
+  to the healthy loop, with or without a :class:`RetryPolicy` attached;
+* same seed + same fault schedule ⇒ bit-identical completions, counters
+  and failed-request sets across repeated ``run()`` calls;
+* failures surface as per-request ``JobCompletion.error`` values — shed,
+  retried, failed-over and failed jobs all complete exactly once
+  (completed + failed + shed == submitted);
+* a blackout on a cache tier degrades latency, not availability, when
+  failover is on — and provably bites when it is off.
+"""
+
+import math
+
+import pytest
+
+from repro.core.io_sim import (DRAM, NVME, S3, Blackout, CorrelatedFault,
+                               Degradation, TransientErrors)
+from repro.obs.slo import BurnWindow, Shedder, SLObjective, SLOMonitor
+from repro.store import EventLoop, QoS, RetryPolicy, build_job
+from repro.store.stats import DrainRecord
+
+DEVICES = [NVME, S3]
+
+
+def _rec(label, ops=64, nb=64 * 4096, tier=0, phase=0):
+    return DrainRecord(label, 1, {tier: ({phase: ops}, {phase: nb})})
+
+
+def _jobs(n=40, spacing=1e-4, tenant="t", ops=64):
+    return [build_job(_rec(f"j{i}", ops=ops), DEVICES, tenant=tenant,
+                      submit=i * spacing, seq=i) for i in range(n)]
+
+
+# ---------------------------------------------------------------------------
+# Fault models
+# ---------------------------------------------------------------------------
+
+
+def test_transient_errors_validation_and_window():
+    with pytest.raises(ValueError):
+        TransientErrors(0.0, error_prob=1.5)
+    with pytest.raises(ValueError):
+        TransientErrors(2.0, 1.0)
+    with pytest.raises(ValueError):
+        Blackout(2.0, 1.0)
+    f = TransientErrors(1.0, 2.0, 0.5, seed=7)
+    assert f.active(1.0) and f.active(1.999) and not f.active(2.0)
+    assert not f.active(0.999)
+
+
+def test_op_fails_at_is_deterministic_and_seeded():
+    d = NVME.with_fault(TransientErrors(1.0, 2.0, 0.5, seed=7))
+    draws = [d.op_fails_at(1.5, 0, i, 0, 0) for i in range(500)]
+    assert draws == [d.op_fails_at(1.5, 0, i, 0, 0) for i in range(500)]
+    frac = sum(draws) / len(draws)
+    assert 0.4 < frac < 0.6  # unbiased-ish at p=0.5
+    # different seed -> different failure set
+    d2 = NVME.with_fault(TransientErrors(1.0, 2.0, 0.5, seed=8))
+    assert draws != [d2.op_fails_at(1.5, 0, i, 0, 0) for i in range(500)]
+    # outside the window nothing fails
+    assert not any(d.op_fails_at(0.5, 0, i, 0, 0) for i in range(100))
+    assert not any(d.op_fails_at(2.5, 0, i, 0, 0) for i in range(100))
+
+
+def test_failure_sets_nest_in_error_prob():
+    # same key fails at p_lo ⇒ fails at p_hi (threshold draws share the
+    # uniform), the structural basis of makespan monotonicity
+    lo = NVME.with_fault(TransientErrors(0.0, 1.0, 0.1, seed=3))
+    hi = NVME.with_fault(TransientErrors(0.0, 1.0, 0.4, seed=3))
+    keys = [(0, i, s, a) for i in range(50) for s in range(4)
+            for a in range(2)]
+    for k in keys:
+        if lo.op_fails_at(0.5, *k):
+            assert hi.op_fails_at(0.5, *k)
+
+
+def test_blackout_fails_everything_and_error_fault_flags():
+    b = NVME.with_fault(Blackout(1.0, 2.0))
+    assert all(b.op_fails_at(1.5, 0, i, 0, 0) for i in range(50))
+    assert b.has_error_faults
+    assert not NVME.has_error_faults
+    # Degradation alone cannot fail ops
+    deg = NVME.with_fault(Degradation(0.0, 1.0))
+    assert not deg.has_error_faults
+    # error faults never stretch latency/bandwidth factors
+    assert b.latency_factor_at(1.5) == 1.0
+    assert b.bandwidth_factor_at(1.5) == 1.0
+
+
+def test_correlated_fault_stamps_named_tiers():
+    cf = CorrelatedFault(Blackout(1.0, 2.0), (NVME.name, S3.name))
+    out = cf.apply([NVME, S3, DRAM])
+    assert len(out[0].faults) == 1 and len(out[1].faults) == 1
+    assert not out[2].faults
+    assert out[0].faults[0] is out[1].faults[0]  # same window object
+    with pytest.raises(ValueError):
+        CorrelatedFault(Blackout(0.0), ("nope",)).apply([NVME, S3])
+
+
+def test_retry_policy_validation():
+    with pytest.raises(ValueError):
+        RetryPolicy(max_retries=-1)
+    with pytest.raises(ValueError):
+        RetryPolicy(backoff_factor=0.5)
+    with pytest.raises(ValueError):
+        RetryPolicy(timeout_k=0.0)
+    with pytest.raises(ValueError):
+        RetryPolicy(jitter=-0.1)
+
+
+# ---------------------------------------------------------------------------
+# Healthy-path bit-identity (contract #8)
+# ---------------------------------------------------------------------------
+
+
+def test_policy_on_healthy_devices_is_bit_identical():
+    jobs = _jobs()
+    base = EventLoop(DEVICES, queue_depth=64).run(jobs)
+    armed = EventLoop(DEVICES, queue_depth=64, retry=RetryPolicy()).run(jobs)
+    assert base.completions == armed.completions
+    assert armed.counters == {}
+
+
+def test_zero_prob_transient_errors_is_bit_identical_to_healthy():
+    jobs = _jobs()
+    base = EventLoop(DEVICES, queue_depth=64).run(jobs)
+    d0 = [NVME.with_fault(TransientErrors(0.0, error_prob=0.0)), S3]
+    out = EventLoop(d0, queue_depth=64, retry=RetryPolicy()).run(jobs)
+    assert base.completions == out.completions
+    assert out.counters == {}
+
+
+def test_serial_mode_is_blind_to_error_faults():
+    jobs = _jobs()
+    base = EventLoop(DEVICES, queue_depth=64).run(jobs, mode="serial")
+    db = [NVME.with_fault(Blackout(0.0)), S3]
+    out = EventLoop(db, queue_depth=64, retry=RetryPolicy()).run(
+        jobs, mode="serial")
+    assert base.completions == out.completions
+
+
+# ---------------------------------------------------------------------------
+# Retry / backoff / deadline
+# ---------------------------------------------------------------------------
+
+
+def _transient_run(error_prob=0.05, seed=3, policy=None, jobs=None):
+    jobs = jobs if jobs is not None else _jobs()
+    M = EventLoop(DEVICES, queue_depth=64).run(jobs).makespan
+    dev = [NVME.with_fault(
+        TransientErrors(0.25 * M, 0.75 * M, error_prob, seed=seed)), S3]
+    loop = EventLoop(dev, queue_depth=64, retry=policy or RetryPolicy())
+    return loop.run(jobs), M
+
+
+def test_transient_errors_retry_and_stretch_makespan():
+    out, M = _transient_run()
+    assert out.counters.get("retry.nvme_970evo", 0) > 0
+    assert out.makespan >= M
+    assert len(out.completions) == 40
+    # transient faults with failover available lose nothing
+    assert not out.errors
+    assert out.availability() == 1.0
+
+
+def test_faulted_run_is_replayable_bit_identical():
+    jobs = _jobs()
+    a, _ = _transient_run(jobs=jobs)
+    b, _ = _transient_run(jobs=jobs)
+    assert a.completions == b.completions
+    assert a.counters == b.counters
+    assert [c.label for c in a.errors] == [c.label for c in b.errors]
+
+
+def test_different_fault_seed_changes_schedule():
+    jobs = _jobs()
+    a, _ = _transient_run(seed=3, jobs=jobs)
+    b, _ = _transient_run(seed=4, jobs=jobs)
+    assert a.completions != b.completions
+
+
+def test_backoff_delays_are_priced_on_the_virtual_clock():
+    # one job, first attempt lands inside a blackout window the first
+    # backoff (0.5 s, no jitter) clears: makespan grows by at least that
+    # delay relative to the healthy price
+    jobs = _jobs(n=1)
+    healthy = EventLoop(DEVICES, queue_depth=64).run(jobs)
+    assert healthy.makespan < 0.4
+    pol = RetryPolicy(backoff_base=0.5, jitter=0.0)
+    dev = [NVME.with_fault(Blackout(0.0, 0.4)), S3]
+    out = EventLoop(dev, queue_depth=64, retry=pol).run(jobs)
+    assert not out.errors
+    assert out.makespan >= 0.5  # paid at least one backoff
+
+
+def test_max_retries_bounds_attempts_then_fails_without_failover():
+    jobs = _jobs(n=5)
+    pol = RetryPolicy(max_retries=2, failover=False, jitter=0.0)
+    dev = [NVME.with_fault(Blackout(0.0)), S3]
+    out = EventLoop(dev, queue_depth=64, retry=pol).run(jobs)
+    assert len(out.errors) == 5
+    assert all(c.error == "io:nvme_970evo" for c in out.errors)
+    assert out.availability() == 0.0
+    # bounded: exactly max_retries backoffs' worth of re-draws per unit
+    assert out.counters["retry.nvme_970evo"] == 5 * 64 * 2
+    assert out.counters["error.t"] == 5
+
+
+def test_deadline_exhausts_before_max_retries():
+    jobs = _jobs(n=1)
+    # huge backoffs + tiny timeout: the deadline trips on the first failure
+    pol = RetryPolicy(max_retries=50, backoff_base=10.0, timeout_k=1.0,
+                      failover=False, jitter=0.0)
+    dev = [NVME.with_fault(Blackout(0.0)), S3]
+    out = EventLoop(dev, queue_depth=64, retry=pol).run(jobs)
+    assert len(out.errors) == 1
+    # far fewer than 50 rounds of retries happened
+    assert out.counters["retry.nvme_970evo"] <= 64 * 3
+
+
+# ---------------------------------------------------------------------------
+# Failover
+# ---------------------------------------------------------------------------
+
+
+def test_blackout_with_failover_degrades_latency_not_availability():
+    jobs = _jobs()
+    M = EventLoop(DEVICES, queue_depth=64).run(jobs).makespan
+    dev = [NVME.with_fault(Blackout(0.3 * M)), S3]  # NVMe gone for good
+    on = EventLoop(dev, queue_depth=64, retry=RetryPolicy()).run(jobs)
+    off = EventLoop(dev, queue_depth=64,
+                    retry=RetryPolicy(failover=False)).run(jobs)
+    assert not on.errors                      # everything lands on S3
+    assert on.counters.get("failover.nvme_970evo", 0) > 0
+    assert on.makespan > M                    # but slower than healthy
+    assert off.errors                         # without failover it bites
+    assert off.availability("t") < 1.0
+    # conservation either way: every submitted job completes exactly once
+    assert len(on.completions) == len(jobs)
+    assert len(off.completions) == len(jobs)
+
+
+def test_failover_exhausts_on_last_tier():
+    # fault the *backing* tier: there is nowhere left to go
+    jobs = _jobs()
+    dev = [NVME, S3.with_fault(Blackout(0.0))]
+    rec = DrainRecord("s3only", 1, {1: ({0: 8}, {0: 8 << 20})})
+    job = build_job(rec, dev, tenant="t")
+    out = EventLoop(dev, queue_depth=64, retry=RetryPolicy()).run([job])
+    assert len(out.errors) == 1
+    assert out.errors[0].error == "io:s3"
+
+
+def test_correlated_blackout_rides_out_short_window():
+    jobs = _jobs()
+    M = EventLoop(DEVICES, queue_depth=64).run(jobs).makespan
+    cf = CorrelatedFault(Blackout(0.3 * M, 0.5 * M), (NVME.name, S3.name))
+    out = EventLoop(cf.apply(DEVICES), queue_depth=64,
+                    retry=RetryPolicy()).run(jobs)
+    # backoff spans the window: retries land after it clears, nothing lost
+    assert not out.errors
+    assert out.counters.get("retry.nvme_970evo", 0) > 0
+
+
+def test_accounting_plane_is_fault_blind():
+    # retries/failover change timing only: the drain records (logical
+    # IOPS/bytes) are inputs the loop never mutates, so re-building jobs
+    # from the same records yields identical unit loads
+    rec = _rec("j", ops=64)
+    a = build_job(rec, DEVICES)
+    dev = [NVME.with_fault(Blackout(0.0)), S3]
+    EventLoop(dev, queue_depth=64, retry=RetryPolicy()).run([a])
+    b = build_job(rec, DEVICES)
+    assert [(u.ops, u.nbytes, u.pipe) for u in a.units] == \
+           [(u.ops, u.nbytes, u.pipe) for u in b.units]
+
+
+# ---------------------------------------------------------------------------
+# SLO-driven load shedding
+# ---------------------------------------------------------------------------
+
+
+def _shed_setup(n=200, spacing=3e-4):
+    jobs = []
+    seq = 0
+    for i in range(n):
+        for tenant in ("premium", "standard", "standard"):
+            seq += 1
+            jobs.append(build_job(_rec(f"{tenant}{i}"), DEVICES,
+                                  tenant=tenant, submit=i * spacing,
+                                  seq=seq))
+    qos = QoS(priority={"premium": 1})
+    healthy = EventLoop(DEVICES, queue_depth=64, qos=qos).run(jobs)
+    return jobs, qos, healthy
+
+
+def test_shedder_validation():
+    mon = SLOMonitor({"p": SLObjective(1.0)})
+    with pytest.raises(ValueError):
+        Shedder(mon, ("p",), ("p",))          # protect ∩ shed
+    with pytest.raises(ValueError):
+        Shedder(mon, ("p",), ("s",), on_burn=1.0, off_burn=2.0)
+    with pytest.raises(ValueError):
+        Shedder(mon, ("p",), ("s",), hold_s=-1.0)
+
+
+def test_shedding_engages_with_hysteresis_and_protects_premium():
+    jobs, qos, healthy = _shed_setup()
+    M = healthy.makespan
+    obj = SLObjective(latency_s=healthy.percentiles("premium")["p99"] * 5,
+                      target=0.99)
+    win = BurnWindow(long_s=M / 8, short_s=M / 64)
+    dev = [NVME.with_fault(Degradation(0.2 * M, 0.8 * M,
+                                       latency_factor=2.0,
+                                       throughput_factor=1.0)), S3]
+
+    def run(shed_on):
+        mon = SLOMonitor({"premium": obj}, windows=(win,))
+        sh = Shedder(mon, protect=("premium",), shed=("standard",),
+                     on_burn=4.0, off_burn=1.0,
+                     hold_s=M / 4) if shed_on else None
+        res = EventLoop(dev, queue_depth=64, qos=qos, retry=RetryPolicy(),
+                        slo=mon, shedder=sh).run(jobs)
+        return res, sh
+
+    on, sh = run(True)
+    off, _ = run(False)
+    assert sh.trips == 1                      # hold-down prevents flapping
+    assert on.counters["shed.standard"] > 0
+    assert "shed.premium" not in on.counters  # never sheds the protected
+    assert on.availability("premium") == 1.0
+    # relief is real: premium p99 improves and the makespan recovers
+    assert on.percentiles("premium")["p99"] < off.percentiles("premium")["p99"]
+    assert on.makespan < off.makespan
+    # conservation: completed + failed + shed == submitted
+    assert len(on.completions) == len(jobs)
+    shed = [c for c in on.completions if c.error == "shed"]
+    assert len(shed) == on.counters["shed.standard"]
+    assert all(c.tenant == "standard" for c in shed)
+
+
+def test_shedder_reset_restores_purity():
+    jobs, qos, healthy = _shed_setup(n=120)
+    M = healthy.makespan
+    obj = SLObjective(latency_s=healthy.percentiles("premium")["p99"] * 5)
+    win = BurnWindow(long_s=M / 8, short_s=M / 64)
+    dev = [NVME.with_fault(Degradation(0.2 * M, 0.8 * M,
+                                       latency_factor=2.0)), S3]
+
+    def once():
+        mon = SLOMonitor({"premium": obj}, windows=(win,))
+        sh = Shedder(mon, ("premium",), ("standard",), hold_s=M / 4)
+        return EventLoop(dev, queue_depth=64, qos=qos, retry=RetryPolicy(),
+                         slo=mon, shedder=sh).run(jobs)
+
+    assert once().completions == once().completions
+
+
+def test_shed_requests_do_not_feed_slo_monitor():
+    mon = SLOMonitor({"standard": SLObjective(latency_s=1e-9)})
+    # no protected tenants ⇒ burn stays 0; a huge hold-down keeps the
+    # forced engagement latched for the whole (sub-second) run
+    sh = Shedder(mon, protect=(), shed=("standard",), hold_s=1e9)
+    sh.active = True  # force shedding
+    jobs = _jobs(n=10, tenant="standard")
+    out = EventLoop(DEVICES, queue_depth=64, slo=mon, shedder=sh).run(jobs)
+    assert len(out.errors) == 10
+    assert mon.table()[0]["requests"] == 0    # rejections are not evidence
+
+
+def test_slo_observe_error_counts_against_budget():
+    mon = SLOMonitor({"t": SLObjective(latency_s=100.0)})
+    mon.observe("t", 1.0, 0.001, error=True)  # fast but failed
+    row = mon.table()[0]
+    assert row["bad"] == 1
+    assert mon.registry.counter("slo.errors.t").value == 1
+
+
+def test_current_burn_query():
+    mon = SLOMonitor({"t": SLObjective(latency_s=1.0, target=0.9)})
+    for i in range(10):
+        mon.observe("t", 1.0 + i * 0.01, 2.0)  # all bad
+    assert mon.current_burn("t", 1.1) == pytest.approx(10.0)  # 1.0/0.1
+    assert mon.current_burn("nope", 1.1) == 0.0
+
+
+# ---------------------------------------------------------------------------
+# Window integration
+# ---------------------------------------------------------------------------
+
+
+def test_service_window_run_accepts_fault_devices_and_retry(tmp_path):
+    import numpy as np
+
+    from repro.core import arrays as A
+    from repro.core.file import FileReader, WriteOptions, write_table
+
+    rng = np.random.default_rng(0)
+    arr = A.PrimitiveArray.build(rng.integers(0, 1 << 20, 20_000)
+                                 .astype(np.int64))
+    fb = write_table({"c": arr}, WriteOptions("lance-miniblock"))
+    reader = FileReader(fb, store="tiered")
+    sched = reader.scheduler
+    assert isinstance(sched.retry_policy, RetryPolicy)  # compiled in
+    with sched.service_window() as win:
+        for i in range(6):
+            with win.request(tenant="t", at=i * 1e-3, request=f"r{i}"):
+                reader.take("c", rng.integers(0, 20_000, 64))
+    healthy = win.run("interleaved")
+    assert not healthy.errors
+    M = healthy.makespan
+    faulted = [d.with_fault(Blackout(0.0)) if d.name == NVME.name else d
+               for d in sched._devices()]
+    out = win.run("interleaved", devices=faulted)
+    again = win.run("interleaved", devices=faulted)
+    assert out.completions == again.completions  # faulted purity
+    assert len(out.completions) == len(healthy.completions)
+    # with failover compiled in, a cache blackout loses nothing
+    assert not out.errors
+    # and the healthy run is still reproducible afterwards
+    assert win.run("interleaved").completions == healthy.completions

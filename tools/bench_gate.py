@@ -19,6 +19,11 @@ code they reproduce bit-for-bit, so the gate can be strict:
   rates — anything under an ``slo`` path segment or an ``slo_``-prefixed
   key) are virtual-clock outputs: always strict, never rate-skipped — a
   drifted detection delay is a regression of the monitoring plane itself;
+* failure/recovery metrics (the chaos bench's ``fault.*`` subtree, the
+  ``shed.*``/``retry.*``/``failover.*``/``error.*`` counter families and
+  any ``availability*`` key) get the same always-strict treatment: the
+  fault schedules are seeded and the clock is virtual, so these reproduce
+  bit-for-bit on equal code;
 * wall-clock and throughput numbers (``rows_per_s``, ``cpu_decode_s``,
   speedups) are machine noise and are ignored unless ``--rates`` opts in,
   which checks them only within a loose ``--rate-tol`` band.
@@ -65,6 +70,15 @@ PCT_RE = re.compile(r"(?:^|_)p\d+(?:_|$)")
 # path that enters an "slo" segment — or a key prefixed "slo_"/"slo." — is
 # compared strictly regardless of rate-marker substrings.
 SLO_RE = re.compile(r"(?:^|\.)slo[._]|(?:^|\.)slo$")
+# Failure/recovery-plane outputs (the chaos bench's fault.* subtree, the
+# shed./retry./failover./error. counter families, availability gates) are
+# virtual-clock deterministic like slo.*: always strict, never rate-skipped
+# — a drifted availability or shed count is a regression of the recovery
+# machinery itself.
+FAULT_RE = re.compile(
+    r"(?:^|\.)fault[._]|(?:^|\.)fault$"
+    r"|(?:^|[._])(?:shed|retry|failover|error)[._]"
+    r"|(?:^|[._])availability")
 FLOAT_RTOL = 1e-6
 
 
@@ -74,6 +88,10 @@ def _is_percentile_key(key: str) -> bool:
 
 def _is_slo_path(path: str) -> bool:
     return SLO_RE.search(path.lower()) is not None
+
+
+def _is_fault_path(path: str) -> bool:
+    return FAULT_RE.search(path.lower()) is not None
 
 
 def _is_rate_key(key: str) -> bool:
@@ -112,7 +130,7 @@ def compare(baseline, current, *, rates: bool = False,
     # contain a rate-marker substring.
     leaf_key = path.rsplit(".", 1)[-1]
     if not _is_percentile_key(leaf_key) and not _is_slo_path(path) \
-            and _is_rate_key(leaf_key):
+            and not _is_fault_path(path) and _is_rate_key(leaf_key):
         if rates and isinstance(baseline, (int, float)) \
                 and isinstance(current, (int, float)) and baseline:
             rel = abs(current - baseline) / abs(baseline)

@@ -46,7 +46,9 @@ def collect(current_dir: str = ".",
     from the first artifact (all artifacts of one run stamp the same run
     metadata); each artifact contributes its ``headline`` subtree under its
     bench name (``BENCH_serve.json`` -> ``serve``) plus, when present, the
-    SLO detection summary — the serving plane's monitoring headline."""
+    SLO detection summary — the serving plane's monitoring headline — and
+    the chaos bench's ``fault`` recovery summary (availability under
+    faults, failover and shedding effectiveness, recovery time)."""
     if names:
         paths = [os.path.join(current_dir, n) for n in names]
     else:
@@ -72,6 +74,21 @@ def collect(current_dir: str = ".",
                 "detection_delay_s": deg.get("detection_delay_s"),
                 "breaches": deg.get("breaches"),
                 "healthy_breaches": slo.get("healthy_breaches"),
+            }
+        fault = art.get("fault")
+        if isinstance(fault, dict):
+            # the chaos bench's recovery headline: availability under
+            # injected faults, failover/shed effectiveness, recovery time
+            entry["fault"] = {
+                "availability_premium_transient": fault.get(
+                    "availability_premium_transient"),
+                "blackout_failed_with_failover": fault.get(
+                    "blackout_failed_with_failover"),
+                "blackout_failed_without_failover": fault.get(
+                    "blackout_failed_without_failover"),
+                "shed_trips": fault.get("shed_trips"),
+                "recovery_s_with_shedding": fault.get(
+                    "recovery_s_with_shedding"),
             }
         if entry:
             row["benches"][bench] = entry
