@@ -1478,6 +1478,213 @@ def chaos_bench():
     _emit("chaos/written", dt * 1e6, "path=BENCH_chaos.json")
 
 
+def search_bench():
+    """Vector retrieval headline (BENCH_search.json): IVF index stored *as
+    dataset fragments* serving Zipf-skewed ANN queries through the shared
+    tiered store, scored by the Pallas distance/top-k kernel.
+
+    The corpus is a mixture of Gaussians — IVF's recall story depends on
+    the data having partition structure (isotropic noise has none: every
+    partition boundary cuts through true neighbourhoods) — and it is
+    written in *partition-clustered row order* (docs sorted by mode).
+    That layout is the point, not a convenience: a posting list over a
+    clustered corpus is a handful of contiguous row runs, so the
+    candidate fetch coalesces into big extent reads priced at sequential
+    bandwidth.  Scattered postings pay the device's 4 KiB read floor per
+    row, which costs *more* than scanning everything — an index over an
+    unclustered corpus loses to brute force on this device model, and
+    should.
+
+    Queries are perturbed copies of stored docs drawn by Zipf popularity,
+    driven through a service window so every search step — centroid take,
+    posting take, candidate take, winner take — is priced per request by
+    the event loop.  The serving tier is sized to the dataset (NVMe holds
+    data + index after the index build's training scan and one warmup
+    batch; S3 stays the durable origin), so the measured pass is steady
+    state.  Gates:
+
+    * **recall@k >= 0.9** against exact float64 brute force at
+      ``nprobe``/``n_partitions`` probing;
+    * **search QPS > full-scan QPS** — the ablation answers the same query
+      stream by taking every row on an identically provisioned store (what
+      brute force costs); probing ``nprobe/n_partitions`` of the corpus
+      must beat reading all of it, or the index is decoration;
+    * **warm repeat is NVMe-served** — re-running the last query touches
+      only cached blocks (index reads warm the same budget as data reads).
+    """
+    from repro.dataset import DatasetWriter, IvfIndex, write_fragments
+    from repro.serve.engine import Retriever
+    from repro.serve.workload import TenantSpec, ZipfWorkload, tenant_summary
+    from repro.store import TieredStore
+
+    n_frag = 4 if SMOKE else 8
+    rows_per = 3_200 if SMOKE else 8_000
+    dim = 64
+    n_partitions = 32 if SMOKE else 64
+    nprobe = 4 if SMOKE else 8
+    k = 10
+    n_requests = 48 if SMOKE else 256
+    qd = 32
+    n_docs = n_frag * rows_per
+    # serving tier sized to the dataset: NVMe holds data + index, S3 is
+    # the durable origin paid once (by the build scan and the warmup)
+    budget = 2 * n_docs * dim * 4
+
+    # clustered corpus: one Gaussian mode per eventual partition, means
+    # far apart relative to the within-mode spread, so a query near a
+    # stored doc keeps its true neighbours inside a handful of partitions.
+    # Rows are *sorted by mode* — partition-clustered layout — so each
+    # k-means posting list is a few contiguous row runs.
+    rng = np.random.default_rng(11)
+    means = 4.0 * rng.standard_normal((n_partitions, dim)).astype(np.float32)
+    modes = np.sort(rng.integers(0, n_partitions, n_docs))
+    vecs = means[modes] \
+        + 0.25 * rng.standard_normal((n_docs, dim)).astype(np.float32)
+    emb = A.FixedSizeListArray.build(vecs)
+    seeds = write_fragments({"embedding": emb}, n_frag, WriteOptions("lance"))
+    w = DatasetWriter(
+        files=seeds,
+        store=lambda d: TieredStore.cached(d, cache_bytes=budget),
+        queue_depth=qd, tracer=TRACER)
+    t0 = time.perf_counter()
+    ivf = IvfIndex.build(w, "embedding", n_partitions=n_partitions,
+                         n_fragments=2, seed=0)
+    build_stats = w.io_stats()
+    retr = Retriever(w.reader(), "embedding", index=ivf)
+
+    wl = ZipfWorkload(n_rows=n_docs,
+                      tenants=[TenantSpec("search", rows_per_request=1)],
+                      n_requests=n_requests, zipf_s=1.05,
+                      arrival_rate=2_000.0, seed=3)
+    reqs = wl.generate()
+    qrng = np.random.default_rng(5)
+    queries = [vecs[int(req.rows[0])]
+               + 0.05 * qrng.standard_normal(dim).astype(np.float32)
+               for req in reqs]
+    # warmup: one batched search over the whole query set promotes every
+    # probed partition, posting run and winner block into the NVMe tier —
+    # the measured pass below is the steady-state serving regime
+    retr.search(np.stack(queries), k=k, nprobe=nprobe)
+    w.reset_io()
+    got = []
+    with w.scheduler.service_window(wl.qos()) as win:
+        for i, req in enumerate(reqs):
+            with win.request(tenant="search", at=req.at,
+                             request=f"search/{i}"):
+                res = retr.search(queries[i], k=k, nprobe=nprobe)
+            got.append(res.ids[0])
+        inter = win.run("interleaved")
+        serial = win.run("serial")
+    dt = time.perf_counter() - t0
+    st = w.io_stats()
+    tiers = {s.name: s for s in w.tier_stats()}
+    s3, nvme = tiers["s3"], tiers["nvme_970evo"]
+
+    # exact recall@k against float64 brute force (per query, so the full
+    # run never materialises an (n_requests, n_docs) distance matrix)
+    v64 = vecs.astype(np.float64)
+    hits = 0
+    for q, ids in zip(queries, got):
+        d = ((v64 - q.astype(np.float64)) ** 2).sum(-1)
+        top = set(np.argsort(d, kind="stable")[:k].tolist())
+        hits += sum(int(i) in top for i in ids if i >= 0)
+    recall = hits / (n_requests * k)
+
+    # warm repeat: the last query's blocks are the most recently used —
+    # serving it again must touch NVMe only (shared index + data budget)
+    w.reset_io()
+    retr.search(queries[-1], k=k, nprobe=nprobe)
+    wtiers = {s.name: s for s in w.tier_stats()}
+    warm_hit = wtiers["nvme_970evo"].hit_rate
+    warm_s3 = wtiers["s3"].n_iops
+
+    # full-scan ablation: same query stream answered by taking every row
+    # on an identically provisioned (and identically warmed) fresh store
+    n_abl = n_requests if SMOKE else min(n_requests, 64)
+    w2 = DatasetWriter(
+        files=seeds,
+        store=lambda d: TieredStore.cached(d, cache_bytes=budget),
+        queue_depth=qd, tracer=TRACER)
+    all_rows = np.arange(n_docs, dtype=np.int64)
+    w2.take("embedding", all_rows)  # warm: the scan set is NVMe-resident too
+    w2.reset_io()
+    with w2.scheduler.service_window(wl.qos()) as win2:
+        for i, req in enumerate(reqs[:n_abl]):
+            with win2.request(tenant="search", at=req.at,
+                              request=f"scan/{i}"):
+                w2.take("embedding", all_rows)
+        inter_fs = win2.run("interleaved")
+    qps_search = n_requests / inter.makespan
+    qps_scan = n_abl / inter_fs.makespan
+    sum_inter = tenant_summary(inter, ["search"])
+
+    results = {
+        "meta": {"n_docs": n_docs, "dim": dim, "n_fragments": n_frag,
+                 "n_requests": n_requests, "queue_depth": qd,
+                 "nvme_budget_bytes": budget, "zipf_s": wl.zipf_s,
+                 "smoke": SMOKE, "cpu_wall_s": round(dt, 6)},
+        "index": {
+            "n_partitions": n_partitions, "nprobe": nprobe, "k": k,
+            "index_rows": n_partitions,
+            "index_versions": len(ivf.writer.versions),
+            "build_logical_iops": build_stats.n_iops,
+            "build_logical_bytes": build_stats.bytes_read,
+        },
+        "counted": {
+            "logical_iops": st.n_iops,
+            "logical_bytes": st.bytes_read,
+            "iops_per_query": round(st.n_iops / n_requests, 4),
+            "s3_iops": s3.n_iops, "s3_bytes_read": s3.bytes_read,
+            "nvme_iops": nvme.n_iops,
+            "nvme_hit_rate": round(nvme.hit_rate, 4)
+            if nvme.hits + nvme.misses else None,
+        },
+        "warm_repeat": {
+            "nvme_hit_rate": round(warm_hit, 4),
+            "s3_iops": warm_s3,
+        },
+        "latency": {"interleaved_ms": sum_inter,
+                    "serial_all_p99_ms":
+                        tenant_summary(serial, ["search"])["all"]["p99"]},
+        "fullscan_ablation": {
+            "n_requests": n_abl,
+            "makespan_s": round(inter_fs.makespan, 6),
+            "logical_iops": w2.io_stats().n_iops,
+            "logical_bytes": w2.io_stats().bytes_read,
+        },
+        "headline": {
+            "gate": "recall@k >= 0.9; search qps > full-scan qps; "
+                    "warm repeat NVMe-served",
+            "recall_at_k": round(recall, 6),
+            "search_qps": round(qps_search, 3),
+            "fullscan_qps": round(qps_scan, 3),
+            "qps_search_over_fullscan": round(qps_search / qps_scan, 3),
+            "p50_search_ms": round(sum_inter["all"]["p50"], 6),
+            "p99_search_ms": round(sum_inter["all"]["p99"], 6),
+            "makespan_s": round(inter.makespan, 6),
+            "warm_nvme_hit_rate": round(warm_hit, 4),
+        },
+    }
+    assert recall >= 0.9, \
+        f"IVF recall@{k} must stay >= 0.9 at nprobe={nprobe}/" \
+        f"{n_partitions} on clustered data (got {recall:.4f})"
+    assert qps_search > qps_scan, \
+        f"index-served QPS must beat the full-scan ablation " \
+        f"({qps_search:.2f} vs {qps_scan:.2f})"
+    assert warm_hit == 1.0 and warm_s3 == 0, \
+        f"warm repeat must be fully NVMe-served " \
+        f"(hit_rate={warm_hit:.4f}, s3_iops={warm_s3})"
+    _emit("search/recall", dt * 1e6,
+          f"recall_at_{k}={recall:.4f};nprobe={nprobe}/{n_partitions};"
+          f"iops_per_query={st.n_iops / n_requests:.1f}")
+    _emit("search/qps", inter.makespan * 1e6,
+          f"search_qps={qps_search:.1f};fullscan_qps={qps_scan:.1f};"
+          f"speedup={qps_search / qps_scan:.1f}x;"
+          f"warm_nvme_hit_rate={warm_hit:.2f}")
+    _dump_json("BENCH_search.json", results)
+    _emit("search/written", 0.0, "path=BENCH_search.json")
+
+
 def kernel_bench():
     """Device decode paths: ref-oracle throughput on CPU + kernel validation
     (interpret mode executes the kernel body; wall-time is not TPU time)."""
@@ -1538,8 +1745,8 @@ ALL = [fig1_device_model, fig10_parquet_random_access,
        fig11_encodings_random_access, fig12_fullzip_vs_miniblock,
        fig13_compression, fig14_16_full_scan, fig17_scan_decode_cost,
        fig18_struct_packing, store_tiering, take_decode, decode_bench,
-       dataset_take, ingest_bench, serve_bench, chaos_bench, kernel_bench,
-       loader_bench]
+       dataset_take, ingest_bench, serve_bench, chaos_bench, search_bench,
+       kernel_bench, loader_bench]
 
 
 def _bench_names():

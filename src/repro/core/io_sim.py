@@ -435,6 +435,15 @@ class DeviceModel:
                 f *= getattr(d, "throughput_factor", 1.0)
         return f
 
+    def fault_active_at(self, t: float) -> bool:
+        """Is any scheduled fault window (degradation *or* error-type)
+        open at virtual time ``t``?  Used by the store's fault-aware cache
+        admission: a block fetched while its source tier is browned out is
+        slow-path traffic, not working-set evidence, so it is not admitted.
+        Like every fault consumer this reads only the schedule — priced
+        accounting stays fault-blind (see the class docstring)."""
+        return any(d.active(t) for d in self.faults)
+
     @property
     def has_error_faults(self) -> bool:
         """True if any scheduled fault can *fail* ops (vs merely slow

@@ -13,5 +13,6 @@ from .manifest import (  # noqa: F401
     footer_meta,
     write_fragments,
 )
+from .ivf import IvfIndex, kmeans  # noqa: F401
 from .reader import DatasetReader  # noqa: F401
 from .writer import DatasetWriter  # noqa: F401

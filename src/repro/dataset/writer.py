@@ -94,6 +94,42 @@ class DatasetWriter:
                 self._append_file(bytes(fb))
             self.commit()
 
+    @classmethod
+    def attached(cls, parent: "DatasetWriter",
+                 opts: Optional[WriteOptions] = None,
+                 decode: Optional[str] = None) -> "DatasetWriter":
+        """A sibling writer over ``parent``'s disk / store / scheduler.
+
+        Its fragments land in the *same* global address space (tail-appended
+        and 8-aligned like any append), so their blocks carry the same
+        sector ids, warm the same :class:`~repro.store.BlockCache` budget,
+        and drain through the same :class:`~repro.store.IOScheduler` queues
+        as the parent's data — but it keeps its own schema, fragment list
+        and manifest versions, so it can commit, time-travel and
+        ``compact()`` independently.  This is the index-as-fragments
+        substrate: an :class:`~repro.dataset.IvfIndex` built through an
+        attached writer is versioned and maintained exactly like data while
+        its reads contend for the one shared IO budget.
+        """
+        self = cls.__new__(cls)
+        self.opts = opts or parent.opts
+        self.disk = parent.disk
+        self.store = parent.store
+        self.scheduler = parent.scheduler
+        self.tracer = parent.tracer
+        self._decode = decode if decode is not None else parent._decode
+        self._dict_cached = parent._dict_cached
+        self._columns = None
+        self.fragments = []
+        self._pending = []
+        self.versions = []
+        # disjoint reader-cache key space from the parent: ids only key
+        # this writer's private _frag_readers / _version_readers dicts
+        self._next_id = 0
+        self._frag_readers = {}
+        self._version_readers = {}
+        return self
+
     # -- geometry ------------------------------------------------------------
     @property
     def flush_policy(self) -> Optional[FlushPolicy]:

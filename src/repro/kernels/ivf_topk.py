@@ -1,0 +1,103 @@
+"""Pallas TPU kernel: batched IVF distance + top-k selection.
+
+One grid step scores one 8-row query tile against the full candidate matrix
+(the posting lists of every probed partition, concatenated by the search
+path): squared-L2 distances via one MXU matmul, then ``k`` masked-argmin
+selection sweeps with a deterministic tie-break toward the lowest candidate
+row id — so the winner set is bit-reproducible no matter how the posting
+lists happened to be ordered on disk.
+
+The per-query eligibility ``mask`` is what makes one shared candidate
+matrix serve a *batch* of IVF queries: each query probes its own
+``nprobe`` partitions, so a candidate fetched for query A may be out of
+scope for query B; masked (and padding) entries score ``+inf`` and carry
+the id sentinel, which the selection sweep can never prefer.
+
+Inputs are pre-padded by :func:`repro.kernels.ops.ivf_topk` (queries to a
+multiple of 8 rows, candidates to a multiple of 128, dims to a multiple of
+128 — the f32 VMEM tile) so the BlockSpec tiling is static.  VMEM budget:
+the candidate matrix rides whole into every grid step, so callers keep
+``N * D * 4`` bytes (plus the (8, N) distance tile) comfortably under a
+core's ~16 MiB — the search path's per-probe candidate counts are far
+below that.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import IVF_ID_SENTINEL
+
+__all__ = ["ivf_topk_pallas", "QUERY_TILE", "K_PAD"]
+
+QUERY_TILE = 8   # f32 min sublane tile: one grid step scores 8 queries
+K_PAD = 128      # output lane width; k <= K_PAD, columns >= k are sentinel
+
+
+def _kernel(q_ref, c_ref, id_ref, m_ref, out_d_ref, out_i_ref, *, k: int):
+    q = q_ref[...]                     # (QUERY_TILE, Dp) f32
+    c = c_ref[...]                     # (Np, Dp) f32
+    ids = id_ref[...]                  # (1, Np) int32
+    mask = m_ref[...]                  # (QUERY_TILE, Np) int32
+    qq = jnp.sum(q * q, axis=1, keepdims=True)                      # (QT, 1)
+    cc = jnp.sum(c * c, axis=1, keepdims=True).T                    # (1, Np)
+    dot = jnp.dot(q, c.T, preferred_element_type=jnp.float32)       # (QT, Np)
+    d = qq - 2.0 * dot + cc
+    eligible = mask != 0
+    d = jnp.where(eligible, d, jnp.inf).astype(jnp.float32)
+    idrow = jnp.where(eligible, ids, IVF_ID_SENTINEL)               # (QT, Np)
+    colk = jax.lax.broadcasted_iota(jnp.int32, (q.shape[0], K_PAD), 1)
+    out_d = jnp.full((q.shape[0], K_PAD), jnp.inf, jnp.float32)
+    out_i = jnp.full((q.shape[0], K_PAD), IVF_ID_SENTINEL, jnp.int32)
+    for j in range(k):
+        m = jnp.min(d, axis=1, keepdims=True)                       # (QT, 1)
+        tie = jnp.where(d == m, idrow, IVF_ID_SENTINEL)
+        wid = jnp.min(tie, axis=1, keepdims=True)                   # (QT, 1)
+        out_d = jnp.where(colk == j, m, out_d)
+        out_i = jnp.where(colk == j, wid, out_i)
+        sel = (d == m) & (idrow == wid)
+        d = jnp.where(sel, jnp.inf, d)
+        idrow = jnp.where(sel, IVF_ID_SENTINEL, idrow)
+    out_d_ref[...] = out_d
+    out_i_ref[...] = out_i
+
+
+@functools.partial(jax.jit, static_argnames=("k", "interpret"))
+def ivf_topk_pallas(queries: jax.Array, cands: jax.Array, ids: jax.Array,
+                    mask: jax.Array, *, k: int, interpret: bool = True):
+    """(Qp, Dp) f32 queries x (Np, Dp) f32 candidates -> top-k per query.
+
+    ``ids`` is (1, Np) int32, ``mask`` (Qp, Np) int32; all shapes
+    pre-padded (Qp % 8 == Np % 128 == Dp % 128 == 0, sentinel/zero in the
+    padding).  Returns ``(dists, winners)`` of shape (Qp, K_PAD) — see
+    :func:`repro.kernels.ref.ivf_topk_ref` for the exact selection
+    semantics the kernel reproduces bit-identically.
+    """
+    qp, dp = queries.shape
+    np_, _ = cands.shape
+    assert qp % QUERY_TILE == 0 and dp % 128 == 0 and np_ % 128 == 0
+    assert 1 <= k <= K_PAD
+    n_tiles = qp // QUERY_TILE
+    return pl.pallas_call(
+        functools.partial(_kernel, k=k),
+        grid=(n_tiles,),
+        in_specs=[
+            pl.BlockSpec((QUERY_TILE, dp), lambda i: (i, 0)),
+            pl.BlockSpec((np_, dp), lambda i: (0, 0)),
+            pl.BlockSpec((1, np_), lambda i: (0, 0)),
+            pl.BlockSpec((QUERY_TILE, np_), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((QUERY_TILE, K_PAD), lambda i: (i, 0)),
+            pl.BlockSpec((QUERY_TILE, K_PAD), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((qp, K_PAD), jnp.float32),
+            jax.ShapeDtypeStruct((qp, K_PAD), jnp.int32),
+        ],
+        interpret=interpret,
+    )(queries, cands, ids, mask)

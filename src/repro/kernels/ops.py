@@ -15,14 +15,18 @@ import numpy as np
 from . import ref
 from .bitunpack import VALS_PER_BLOCK, bitunpack_pallas
 from .fullzip_gather import fullzip_gather_pallas
+from .ivf_topk import K_PAD, QUERY_TILE, ivf_topk_pallas
 from .miniblock_decode import MAX_ENTRIES, miniblock_decode_pallas
+from .ref import IVF_ID_SENTINEL
 
 __all__ = [
     "bitunpack",
     "miniblock_decode",
     "fullzip_gather",
+    "ivf_topk",
     "pack_words",
     "on_tpu",
+    "IVF_ID_SENTINEL",
 ]
 
 
@@ -92,3 +96,95 @@ def fullzip_gather(zipped: jax.Array, rows: jax.Array, *, use_pallas: bool = Tru
     if not use_pallas:
         return ref.fullzip_gather_ref(zipped, rows)
     return fullzip_gather_pallas(zipped, rows, interpret=not on_tpu())
+
+
+def _ivf_pad(queries, cands, ids, mask):
+    """Pad (queries, cands, ids, mask) to the kernel's static tiling:
+    query rows to a multiple of 8, candidates to a multiple of 128, dims
+    to a multiple of 128.  Zero dim-padding is L2-exact; padded candidate
+    columns are masked out and carry the id sentinel."""
+    q2 = np.atleast_2d(np.asarray(queries))
+    c2 = np.atleast_2d(np.asarray(cands))
+    qn, d = q2.shape
+    n = c2.shape[0]
+    qp = -(-max(qn, 1) // QUERY_TILE) * QUERY_TILE
+    np_ = -(-max(n, 1) // 128) * 128
+    dp = -(-max(d, 1) // 128) * 128
+    qpad = np.zeros((qp, dp), q2.dtype)
+    qpad[:qn, :d] = q2
+    cpad = np.zeros((np_, dp), c2.dtype)
+    cpad[:n, :d] = c2
+    idp = np.full((1, np_), IVF_ID_SENTINEL,
+                  np.asarray(ids).dtype if np.asarray(ids).size else np.int32)
+    idp[0, :n] = np.asarray(ids).reshape(-1)
+    mpad = np.zeros((qp, np_), np.int32)
+    if mask is None:
+        mpad[:qn, :n] = 1
+    else:
+        mpad[:qn, :n] = np.asarray(mask, np.int32).reshape(qn, n)
+    return q2, qpad, cpad, idp, mpad
+
+
+def ivf_topk(queries, cands, ids, k: int, mask=None, *,
+             use_pallas: bool = True, tracer=None):
+    """Batched squared-L2 distance + deterministic top-k over one shared
+    candidate matrix (the IVF search hot loop).
+
+    ``queries``: (Q, D) or (D,); ``cands``: (N, D); ``ids``: (N,)
+    candidate row ids; ``mask``: optional (Q, N) per-query eligibility
+    (1 = candidate in one of this query's probed partitions).  Returns
+    ``(dists, winners)`` of shape (Q, k) — ties break toward the lowest
+    row id, entries past a query's eligible count hold
+    ``(inf, IVF_ID_SENTINEL)``.
+
+    Dispatches to the Pallas kernel when eligible (float32 vectors, ids
+    within 31 bits, k <= 128, at least one candidate); otherwise falls
+    back to the jnp oracle and reports the structured reason through
+    ``tracer`` as a ``decode.fallback.ivf.<reason>`` counter — the same
+    no-silent-fallback contract as the decode kernels.
+    """
+    k = int(k)
+    if k < 1:
+        raise ValueError("k must be positive")
+    q2 = np.atleast_2d(np.asarray(queries))
+    c2 = np.atleast_2d(np.asarray(cands))
+    ids_arr = np.asarray(ids).reshape(-1)
+    qn, n = q2.shape[0], c2.shape[0]
+    reason = None
+    if q2.dtype != np.float32 or c2.dtype != np.float32:
+        reason = "non-float32"
+    elif n == 0:
+        reason = "no-candidates"
+    elif k > K_PAD:
+        reason = f">{K_PAD}-k"
+    elif ids_arr.size and int(ids_arr.max()) >= IVF_ID_SENTINEL:
+        reason = ">31-bit-ids"
+    wide = reason == ">31-bit-ids"
+    if wide:
+        # jnp is int32 on CPU: select over *positions* of the candidates
+        # sorted by id (position tie-break == id tie-break) and map back
+        order = np.argsort(ids_arr, kind="stable")
+        c2 = c2[order]
+        if mask is not None:
+            mask = np.atleast_2d(np.asarray(mask))[:, order]
+        ids_sorted, ids_run = ids_arr[order], np.arange(n, dtype=np.int32)
+    else:
+        ids_run = ids_arr if ids_arr.dtype == np.int32 \
+            else ids_arr.astype(np.int32)
+    _, qpad, cpad, idp, mpad = _ivf_pad(q2, c2, ids_run, mask)
+    if not use_pallas or reason is not None:
+        if use_pallas and tracer is not None:
+            tracer.fallback("ivf", reason, n_queries=qn, n_candidates=n, k=k)
+        d, w = ref.ivf_topk_ref(jnp.asarray(qpad), jnp.asarray(cpad),
+                                jnp.asarray(idp), jnp.asarray(mpad),
+                                k, kp=max(K_PAD, k))
+    else:
+        d, w = ivf_topk_pallas(jnp.asarray(qpad), jnp.asarray(cpad),
+                               jnp.asarray(idp), jnp.asarray(mpad),
+                               k=k, interpret=not on_tpu())
+    d, w = d[:qn, :k], w[:qn, :k]
+    if wide:
+        wnp = np.asarray(w)
+        w = np.where(wnp == IVF_ID_SENTINEL, np.int64(IVF_ID_SENTINEL),
+                     ids_sorted[np.minimum(wnp, n - 1)])
+    return d, w

@@ -10,7 +10,13 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-__all__ = ["bitunpack_ref", "miniblock_decode_ref", "fullzip_gather_ref"]
+__all__ = ["bitunpack_ref", "miniblock_decode_ref", "fullzip_gather_ref",
+           "ivf_topk_ref", "IVF_ID_SENTINEL"]
+
+# Padding / exhaustion marker for ivf_topk: never a valid row id (global row
+# ids are dispatch-checked to fit in 31 bits), and maximal so the
+# min-id tie-break never prefers it over a real candidate.
+IVF_ID_SENTINEL = (1 << 31) - 1
 
 
 def bitunpack_ref(words: jax.Array, n: int, bits: int) -> jax.Array:
@@ -93,6 +99,50 @@ def miniblock_decode_ref(
         return rep, d, out
 
     return jax.vmap(one)(rep_words, def_words, val_words, n_entries, vbits, refs)
+
+
+def ivf_topk_ref(queries: jax.Array, cands: jax.Array, ids: jax.Array,
+                 mask: jax.Array, k: int, kp: int = 128):
+    """Batched squared-L2 distance + deterministic top-k selection.
+
+    ``queries``: (Q, D) float; ``cands``: (N, D) float; ``ids``: (1, N)
+    int32 candidate row ids (``IVF_ID_SENTINEL`` in padding); ``mask``:
+    (Q, N) int32 — 1 where candidate n is eligible for query q (IVF probes
+    different partitions per query over one shared candidate matrix), 0
+    where it is not (and in padding columns).
+
+    Returns ``(dists, winners)`` of shape (Q, kp): entry j is the j-th
+    nearest eligible candidate, ties broken toward the *lowest row id*
+    (bit-reproducible regardless of candidate order); entries past the
+    eligible count — and columns >= k — hold ``(inf, IVF_ID_SENTINEL)``.
+    Ground truth for the Pallas kernel: same op sequence, validated
+    bit-identical in interpret mode.
+    """
+    acc = queries.dtype
+    qq = jnp.sum(queries * queries, axis=1, keepdims=True)        # (Q, 1)
+    cc = jnp.sum(cands * cands, axis=1, keepdims=True).T          # (1, N)
+    dot = jnp.dot(queries, cands.T, preferred_element_type=acc)   # (Q, N)
+    d = qq - 2.0 * dot + cc
+    eligible = mask != 0
+    d = jnp.where(eligible, d, jnp.inf).astype(acc)
+    # the kernel route is int32-only; the ref also backs the >31-bit-id
+    # fallback, where the sentinel has to stay maximal in the wider dtype
+    sent = IVF_ID_SENTINEL if ids.dtype == jnp.int32 \
+        else jnp.iinfo(ids.dtype).max
+    idrow = jnp.where(eligible, ids, sent)                        # (Q, N)
+    colk = jax.lax.broadcasted_iota(jnp.int32, (queries.shape[0], kp), 1)
+    out_d = jnp.full((queries.shape[0], kp), jnp.inf, acc)
+    out_i = jnp.full((queries.shape[0], kp), sent, ids.dtype)
+    for j in range(k):
+        m = jnp.min(d, axis=1, keepdims=True)                     # (Q, 1)
+        tie = jnp.where(d == m, idrow, sent)
+        wid = jnp.min(tie, axis=1, keepdims=True)                 # (Q, 1)
+        out_d = jnp.where(colk == j, m, out_d)
+        out_i = jnp.where(colk == j, wid, out_i)
+        sel = (d == m) & (idrow == wid)
+        d = jnp.where(sel, jnp.inf, d)
+        idrow = jnp.where(sel, sent, idrow)
+    return out_d, out_i
 
 
 def fullzip_gather_ref(zipped: jax.Array, rows: jax.Array) -> jax.Array:

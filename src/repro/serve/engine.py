@@ -13,14 +13,36 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..core.file import FileReader
+from ..kernels import ops
+from ..obs import NULL_TRACER
 
-__all__ = ["BatchedEngine", "Retriever"]
+__all__ = ["BatchedEngine", "Retriever", "SearchResult"]
 
 
 @dataclasses.dataclass
 class GenResult:
     tokens: np.ndarray  # (B, n_gen)
     steps: int
+
+
+@dataclasses.dataclass
+class SearchResult:
+    """One batched IVF search: per-query winners plus the one batched take
+    that materialized them.
+
+    ``ids``/``distances`` are (Q, k); a query with fewer than ``k``
+    eligible candidates pads with ``id = -1`` / ``distance = inf``.
+    ``winner_rows`` is the deduplicated ascending union of valid ids —
+    the row set the winner ``take`` fetched; ``values`` is that take's
+    result, aligned with ``winner_rows`` (``None`` when ``fetch=False``).
+    """
+
+    ids: np.ndarray          # (Q, k) int64 global row ids, -1 at padding
+    distances: np.ndarray    # (Q, k) float32 squared L2, inf at padding
+    probes: np.ndarray       # (Q, nprobe) probed partition ids
+    winner_rows: np.ndarray  # unique valid ids, ascending
+    values: Optional[object] = None
+    n_candidates: int = 0    # posting entries scored across probed parts
 
 
 class BatchedEngine:
@@ -90,18 +112,26 @@ class Retriever:
     observed scan/take mix).
     """
 
-    def __init__(self, source, column: str = "embedding", store=None):
+    def __init__(self, source, column: str = "embedding", store=None,
+                 index=None, decode: Optional[str] = None):
         if isinstance(source, (list, tuple)):
             from ..dataset import DatasetReader
 
-            self.reader = DatasetReader(list(source), store=store)
+            self.reader = DatasetReader(list(source), store=store,
+                                        decode=decode)
         elif isinstance(source, (bytes, bytearray)):
-            self.reader = FileReader(source, store=store)
+            self.reader = FileReader(source, store=store, decode=decode)
         else:
             if store is not None:
                 raise ValueError("store is fixed by a ready reader")
             self.reader = source
         self.column = column
+        # ``index``: an IvfIndex whose attached writer shares this reader's
+        # scheduler/store — :meth:`search` turns queries into row ids.
+        # ``decode`` selects the kernel route for both file decode and the
+        # search distance/top-k ("numpy" = jnp oracles, default Pallas).
+        self.index = index
+        self.decode = decode
 
     def fetch(self, row_ids: np.ndarray):
         """take() — at most 2 IOPS/row via full-zip (§4.1.4).  Row ids are
@@ -109,6 +139,71 @@ class Retriever:
         self.reader.reset_io()
         out = self.reader.take(self.column, np.asarray(row_ids, np.int64))
         return out, self.reader.io_stats()
+
+    def search(self, query, k: int = 10, nprobe: int = 4,
+               fetch: bool = True, index_version: Optional[int] = None,
+               ) -> SearchResult:
+        """IVF search: probe partitions → batched posting-list fetch →
+        distance/top-k kernel → one batched ``take`` of the winners.
+
+        Every IO lands on the retriever's shared scheduler/store — index
+        reads (centroids, posting lists) and data reads (candidate
+        vectors, winner rows) share one cache budget and one drain log, so
+        per-request attribution sees the whole search, not just its data
+        half.  Accepts one query ``(D,)`` or a batch ``(Q, D)``;
+        multi-query batches score one shared candidate matrix under a
+        per-query partition mask, so each query still sees exactly its own
+        ``nprobe`` probes.  Deterministic end to end: k-means is seeded,
+        ties break toward the lowest row id, and the numpy/Pallas kernel
+        routes are bit-identical (``decode`` knob).
+        """
+        if self.index is None:
+            raise ValueError(
+                "no index attached — IvfIndex.build(writer, column) first")
+        q = np.atleast_2d(np.asarray(query, np.float32))
+        nq = q.shape[0]
+        p = self.index.n_partitions
+        k = int(k)
+        nprobe = min(max(1, int(nprobe)), p)
+        use_pallas = self.decode != "numpy"
+        tracer = getattr(self.reader, "tracer", NULL_TRACER)
+        with tracer.span("search", cat="serve", n_queries=nq, k=k,
+                         nprobe=nprobe):
+            # 1. probe: nearest centroids per query (centroid rows come
+            # through the shared store; warm after the first search)
+            cent = self.index.centroids(index_version)
+            _, probes = ops.ivf_topk(
+                q, cent, np.arange(p, dtype=np.int32), nprobe,
+                use_pallas=use_pallas, tracer=tracer)
+            probes = np.asarray(probes, np.int64)           # (Q, nprobe)
+            # 2. one batched posting fetch for the union of probed parts
+            parts = np.unique(probes)
+            posts = self.index.postings(parts, index_version)
+            cand_ids = np.concatenate(posts) if posts else \
+                np.zeros(0, np.int64)
+            # per-query eligibility: candidate row -> owning partition,
+            # eligible iff that partition is in the query's probe set
+            probed = np.zeros((nq, p), bool)
+            probed[np.repeat(np.arange(nq), nprobe), probes.reshape(-1)] = True
+            part_of = np.repeat(parts, [len(pl) for pl in posts])
+            mask = probed[:, part_of]                       # (Q, N)
+            # 3. one batched take of the candidate vectors, then the kernel
+            cand = self.reader.take(self.column, cand_ids)
+            d, w = ops.ivf_topk(q, np.asarray(cand.values, np.float32),
+                                cand_ids, k, mask=mask,
+                                use_pallas=use_pallas, tracer=tracer)
+            d = np.asarray(d, np.float32)
+            w = np.asarray(w, np.int64)
+            w[w == ops.IVF_ID_SENTINEL] = -1
+            # 4. one batched take of the deduplicated winner rows — the
+            # response payload, served (and priced) like any data read
+            winners = np.unique(w[w >= 0])
+            values = None
+            if fetch and winners.size:
+                values = self.reader.take(self.column, winners)
+            return SearchResult(ids=w, distances=d, probes=probes,
+                                winner_rows=winners, values=values,
+                                n_candidates=int(cand_ids.size))
 
     def tier_stats(self):
         """Per-tier dispatched-IO stats since the last fetch."""

@@ -93,9 +93,32 @@ class TieredStore:
         # down from the IOScheduler (NULL_TRACER = disabled, zero-cost).
         self.drain_log: List[DrainRecord] = []
         self.tracer = NULL_TRACER
+        # Fault-aware admission: when the *source* tier of a fetch has an
+        # open fault window at the current virtual time, the block is
+        # served but NOT admitted into faster tiers — brownout traffic is
+        # slow-path evidence, not working-set evidence, and admitting it
+        # evicts genuinely hot blocks.  ``fault_clock`` is installed by the
+        # IOScheduler (window arrival time inside a service window, the
+        # virtual clock otherwise); ``None`` means no clock — admission is
+        # gated only when a device actually carries faults, so stores whose
+        # devices are healthy (every committed baseline) are bit-identical.
+        self.fault_clock = None
+        self.admission_fault_skips = 0
         for lvl in self.levels:
             if lvl.cache.block_bytes != self.sector:
                 raise ValueError("cache block size must equal the store sector")
+
+    def _admission_gated(self, source: DeviceModel) -> bool:
+        """True when ``source`` is inside a fault window right now (skip
+        admission).  Zero-cost on healthy devices: the faults tuple is
+        empty and the clock is never consulted."""
+        if not source.faults:
+            return False
+        t = self.fault_clock() if self.fault_clock is not None else 0.0
+        if source.fault_active_at(t):
+            self.admission_fault_skips += 1
+            return True
+        return False
 
     # -- constructors -------------------------------------------------------
     @classmethod
@@ -180,6 +203,9 @@ class TieredStore:
                 # kept it (the scheduler consults admission before issuing)
                 if any(bid in lvl.cache for lvl in self.levels):
                     tier = None
+                elif self._admission_gated(self.backing):
+                    # a browned-out backing tier gets no speculative fills
+                    tier = None
                 else:
                     resident = False
                     for lvl in self.levels:
@@ -192,9 +218,13 @@ class TieredStore:
                         tier = li
                         break
                 # fill every tier faster than the one that served (on a
-                # backing miss that is all of them)
-                for li in range(min(tier, len(self.levels))):
-                    self.levels[li].cache.admit(bid)
+                # backing miss that is all of them) — unless the serving
+                # tier is inside a fault window (fault-aware admission)
+                source = self.levels[tier].device if tier < len(self.levels) \
+                    else self.backing
+                if tier > 0 and not self._admission_gated(source):
+                    for li in range(min(tier, len(self.levels))):
+                        self.levels[li].cache.admit(bid)
             if tier != run_tier:
                 flush()
                 run_tier, run_blocks = tier, 0
@@ -355,6 +385,7 @@ class TieredStore:
             lvl.stats.reset()
             lvl.cache.reset_stats()
         self.drain_log = []
+        self.admission_fault_skips = 0
 
     def drop_caches(self) -> None:
         for lvl in self.levels:
@@ -558,6 +589,16 @@ class IOScheduler:
         self._window: Optional[ServiceWindow] = None
         self._request_seq = 0
         self._job_seq = 0
+        # fault-aware admission reads the serving plane's notion of "now":
+        # the current request's arrival inside a service window, the
+        # virtual clock outside one
+        store.fault_clock = self._fault_now
+
+    def _fault_now(self) -> float:
+        win = self._window
+        if win is not None and getattr(win, "_arrival", None) is not None:
+            return win._arrival
+        return self.vclock
 
     def batch(self, label: str = "io", prefetch: bool = False) -> ReadBatch:
         rb = ReadBatch(self, label, prefetch=prefetch)

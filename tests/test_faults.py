@@ -426,3 +426,72 @@ def test_service_window_run_accepts_fault_devices_and_retry(tmp_path):
     assert not out.errors
     # and the healthy run is still reproducible afterwards
     assert win.run("interleaved").completions == healthy.completions
+
+
+# ---------------------------------------------------------------------------
+# Fault-aware cache admission
+# ---------------------------------------------------------------------------
+
+
+def _tiered(backing):
+    import numpy as np
+
+    from repro.core.io_sim import Disk
+    from repro.store import IOScheduler, TieredStore
+
+    disk = Disk(np.arange(1 << 16, dtype=np.uint8) % 251)
+    store = TieredStore.cached(disk, backing=backing, cache_bytes=1 << 20)
+    return store, IOScheduler(store, queue_depth=64)
+
+
+def test_brownout_blocks_are_not_admitted():
+    """A block fetched while its source tier is inside a fault window is
+    served but NOT cached: brownout traffic must not evict the working set
+    (the regression: pre-gate, a brownout polluted the cache with
+    slow-path blocks that then looked "hot")."""
+    store, sch = _tiered(S3.with_fault(Degradation(0.0, latency_factor=8.0)))
+    with sch.batch("take") as io:
+        io.read(0, 4096 * 4)
+    assert len(store.levels[0].cache) == 0
+    assert store.admission_fault_skips == 4
+    # served, not admitted: the reads were still priced on the backing tier
+    assert store.backing_stats.n_iops > 0
+    # error-window faults gate admission too (a blacked-out tier is not
+    # producing working-set evidence either)
+    store_b, sch_b = _tiered(S3.with_fault(Blackout(0.0)))
+    with sch_b.batch("take") as io:
+        io.read(0, 4096 * 2)
+    assert len(store_b.levels[0].cache) == 0
+    assert store_b.admission_fault_skips == 2
+
+
+def test_admission_resumes_outside_the_fault_window():
+    """The gate follows the virtual clock: a future window admits
+    normally, and the skip counter resets with the stats."""
+    store, sch = _tiered(S3.with_fault(Degradation(start=1e9)))
+    with sch.batch("take") as io:
+        io.read(0, 4096 * 4)
+    assert len(store.levels[0].cache) == 4
+    assert store.admission_fault_skips == 0
+    # advance the virtual clock into the window: admission stops
+    store2, sch2 = _tiered(S3.with_fault(Degradation(start=1e-9)))
+    with sch2.batch("warmup") as io:
+        io.read(0, 4096)  # admitted at t=0 (window not yet open)
+    assert len(store2.levels[0].cache) == 1
+    assert sch2.vclock > 1e-9  # the drain advanced the clock into the window
+    with sch2.batch("take") as io:
+        io.read(4096 * 8, 4096 * 2)
+    assert len(store2.levels[0].cache) == 1  # nothing new admitted
+    assert store2.admission_fault_skips == 2
+    store2.reset_stats()
+    assert store2.admission_fault_skips == 0
+
+
+def test_healthy_store_admission_is_unchanged():
+    """No faults -> the gate is never consulted and behaviour is the
+    seed's: every miss admitted (committed baselines stay bit-identical)."""
+    store, sch = _tiered(S3)
+    with sch.batch("take") as io:
+        io.read(0, 4096 * 4)
+    assert len(store.levels[0].cache) == 4
+    assert store.admission_fault_skips == 0

@@ -140,3 +140,116 @@ def test_kernel_matches_host_miniblock_column():
         got_vals.append(np.asarray(vs[c][:ne])[m])
     got = np.concatenate(got_vals)
     np.testing.assert_array_equal(got, vals[validity])
+
+
+# ---------------------------------------------------------------------------
+# ivf_topk: batched distance + deterministic top-k (the IVF search kernel)
+# ---------------------------------------------------------------------------
+
+
+class _FallbackRecorder:
+    """Minimal tracer surface for the ops-layer fallback hook."""
+
+    enabled = True
+
+    def __init__(self):
+        self.calls = []
+
+    def fallback(self, encoding, reason, **args):
+        self.calls.append((encoding, reason))
+
+
+@pytest.mark.parametrize("dim", [3, 64, 128, 200])
+@pytest.mark.parametrize("nq,nc,k", [(1, 7, 3), (5, 300, 10), (9, 129, 1)])
+def test_ivf_topk_parity_sweep(dim, nq, nc, k):
+    """Pallas route bit-identical to the jnp oracle in interpret mode."""
+    r = np.random.default_rng(dim * 1000 + nq)
+    q = r.standard_normal((nq, dim)).astype(np.float32)
+    c = r.standard_normal((nc, dim)).astype(np.float32)
+    ids = r.permutation(nc).astype(np.int64)
+    mask = r.integers(0, 2, (nq, nc)).astype(np.int32)
+    for m in (None, mask):
+        d1, w1 = ops.ivf_topk(q, c, ids, k, mask=m, use_pallas=True)
+        d0, w0 = ops.ivf_topk(q, c, ids, k, mask=m, use_pallas=False)
+        np.testing.assert_array_equal(np.asarray(d1), np.asarray(d0))
+        np.testing.assert_array_equal(np.asarray(w1), np.asarray(w0))
+        assert np.asarray(d1).shape == (nq, k)
+
+
+@pytest.mark.parametrize("dtype", [np.float32, np.float64])
+def test_ivf_topk_matches_brute_force(dtype):
+    r = np.random.default_rng(7)
+    q = r.standard_normal((4, 24)).astype(dtype)
+    c = r.standard_normal((50, 24)).astype(dtype)
+    ids = np.arange(100, 150, dtype=np.int64)
+    d, w = ops.ivf_topk(q, c, ids, 5)
+    brute = ((c[None] - q[:, None]) ** 2).sum(-1).argsort(axis=1)[:, :5]
+    np.testing.assert_array_equal(np.asarray(w), ids[brute])
+
+
+def test_ivf_topk_tie_break_by_row_id():
+    """Equal-distance candidates win in ascending row-id order, regardless
+    of their position in the candidate matrix."""
+    q = np.zeros((1, 8), np.float32)
+    c = np.zeros((6, 8), np.float32)  # all distance 0: pure tie
+    ids = np.array([40, 5, 99, 17, 3, 60], np.int64)
+    for use_pallas in (True, False):
+        _, w = ops.ivf_topk(q, c, ids, 4, use_pallas=use_pallas)
+        np.testing.assert_array_equal(np.asarray(w)[0], [3, 5, 17, 40])
+
+
+def test_ivf_topk_exhaustion_sentinels():
+    """k beyond the eligible count pads with (inf, sentinel -> caller)."""
+    r = np.random.default_rng(3)
+    q = r.standard_normal((2, 16)).astype(np.float32)
+    c = r.standard_normal((3, 16)).astype(np.float32)
+    for use_pallas in (True, False):
+        d, w = ops.ivf_topk(q, c, np.arange(3), 6, use_pallas=use_pallas)
+        d, w = np.asarray(d), np.asarray(w)
+        assert (w[:, 3:] == ops.IVF_ID_SENTINEL).all()
+        assert np.isinf(d[:, 3:]).all()
+        assert (w[:, :3] != ops.IVF_ID_SENTINEL).all()
+
+
+def test_ivf_topk_no_silent_fallback():
+    """Eligible input on the Pallas route must NOT emit a fallback."""
+    tr = _FallbackRecorder()
+    r = np.random.default_rng(0)
+    q = r.standard_normal((2, 32)).astype(np.float32)
+    c = r.standard_normal((20, 32)).astype(np.float32)
+    ops.ivf_topk(q, c, np.arange(20), 4, use_pallas=True, tracer=tr)
+    assert tr.calls == []
+
+
+def test_ivf_topk_fallback_reasons():
+    tr = _FallbackRecorder()
+    r = np.random.default_rng(0)
+    q64 = r.standard_normal((2, 8))
+    c64 = r.standard_normal((10, 8))
+    q32, c32 = q64.astype(np.float32), c64.astype(np.float32)
+    ops.ivf_topk(q64, c64, np.arange(10), 3, tracer=tr)
+    ops.ivf_topk(q32, np.zeros((0, 8), np.float32), np.zeros(0, np.int64),
+                 3, tracer=tr)
+    ops.ivf_topk(q32, c32, np.arange(10, dtype=np.int64) + (1 << 31), 3,
+                 tracer=tr)
+    assert tr.calls == [("ivf", "non-float32"), ("ivf", "no-candidates"),
+                        ("ivf", ">31-bit-ids")]
+    # the fallback route still answers correctly (wide ids kept intact)
+    d, w = ops.ivf_topk(q32, c32, np.arange(10, dtype=np.int64) + (1 << 31), 3)
+    brute = ((c32[None] - q32[:, None]) ** 2).sum(-1).argsort(axis=1)[:, :3]
+    np.testing.assert_array_equal(np.asarray(w), brute + (1 << 31))
+
+
+def test_ivf_topk_telemetry_counter():
+    """The structured reason lands as a decode.fallback.ivf.* counter and a
+    pallas_fallback instant — same contract as the decode kernels."""
+    from repro.obs import Tracer
+
+    tr = Tracer()
+    r = np.random.default_rng(0)
+    ops.ivf_topk(r.standard_normal((1, 8)), r.standard_normal((4, 8)),
+                 np.arange(4), 2, tracer=tr)
+    assert tr.metrics.counter_values("decode.fallback") == \
+        {"decode.fallback.ivf.non-float32": 1}
+    evs = [e for e in tr.events if e["name"] == "pallas_fallback"]
+    assert evs and evs[0]["args"]["reason"] == "non-float32"

@@ -24,6 +24,10 @@ code they reproduce bit-for-bit, so the gate can be strict:
   any ``availability*`` key) get the same always-strict treatment: the
   fault schedules are seeded and the clock is virtual, so these reproduce
   bit-for-bit on equal code;
+* retrieval metrics (``recall*`` keys, ``*_qps`` throughput on the virtual
+  clock, anything under a ``search`` path segment or a ``fullscan``-marked
+  key) are counted/modelled outputs of the search bench: always strict — a
+  drifted recall@k is an index regression, not machine noise;
 * wall-clock and throughput numbers (``rows_per_s``, ``cpu_decode_s``,
   speedups) are machine noise and are ignored unless ``--rates`` opts in,
   which checks them only within a loose ``--rate-tol`` band.
@@ -79,6 +83,15 @@ FAULT_RE = re.compile(
     r"(?:^|\.)fault[._]|(?:^|\.)fault$"
     r"|(?:^|[._])(?:shed|retry|failover|error)[._]"
     r"|(?:^|[._])availability")
+# Retrieval-quality and search-throughput outputs (the search bench's
+# recall@k gate, search/full-scan QPS on the virtual clock, any key under a
+# "search" path segment) are counted/modelled like the rest of the
+# simulator: always strict — a drifted recall or QPS is a regression of the
+# index or the serving path, never machine noise.
+SEARCH_RE = re.compile(
+    r"(?:^|[._])recall|(?:^|[._])qps"
+    r"|(?:^|\.)search[._]|(?:^|\.)search$"
+    r"|(?:^|[._])fullscan")
 FLOAT_RTOL = 1e-6
 
 
@@ -92,6 +105,10 @@ def _is_slo_path(path: str) -> bool:
 
 def _is_fault_path(path: str) -> bool:
     return FAULT_RE.search(path.lower()) is not None
+
+
+def _is_search_path(path: str) -> bool:
+    return SEARCH_RE.search(path.lower()) is not None
 
 
 def _is_rate_key(key: str) -> bool:
@@ -130,7 +147,8 @@ def compare(baseline, current, *, rates: bool = False,
     # contain a rate-marker substring.
     leaf_key = path.rsplit(".", 1)[-1]
     if not _is_percentile_key(leaf_key) and not _is_slo_path(path) \
-            and not _is_fault_path(path) and _is_rate_key(leaf_key):
+            and not _is_fault_path(path) and not _is_search_path(path) \
+            and _is_rate_key(leaf_key):
         if rates and isinstance(baseline, (int, float)) \
                 and isinstance(current, (int, float)) and baseline:
             rel = abs(current - baseline) / abs(baseline)

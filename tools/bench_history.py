@@ -46,9 +46,11 @@ def collect(current_dir: str = ".",
     from the first artifact (all artifacts of one run stamp the same run
     metadata); each artifact contributes its ``headline`` subtree under its
     bench name (``BENCH_serve.json`` -> ``serve``) plus, when present, the
-    SLO detection summary — the serving plane's monitoring headline — and
-    the chaos bench's ``fault`` recovery summary (availability under
-    faults, failover and shedding effectiveness, recovery time)."""
+    SLO detection summary — the serving plane's monitoring headline — the
+    chaos bench's ``fault`` recovery summary (availability under faults,
+    failover and shedding effectiveness, recovery time), and the search
+    bench's retrieval summary (recall@k, index-vs-full-scan QPS, warm
+    NVMe hit rate)."""
     if names:
         paths = [os.path.join(current_dir, n) for n in names]
     else:
@@ -89,6 +91,18 @@ def collect(current_dir: str = ".",
                 "shed_trips": fault.get("shed_trips"),
                 "recovery_s_with_shedding": fault.get(
                     "recovery_s_with_shedding"),
+            }
+        hl = art.get("headline")
+        if isinstance(hl, dict) and "recall_at_k" in hl:
+            # the search bench's retrieval headline: answer quality and
+            # index-vs-brute-force throughput across commits
+            entry["search"] = {
+                "recall_at_k": hl.get("recall_at_k"),
+                "search_qps": hl.get("search_qps"),
+                "fullscan_qps": hl.get("fullscan_qps"),
+                "qps_search_over_fullscan": hl.get(
+                    "qps_search_over_fullscan"),
+                "warm_nvme_hit_rate": hl.get("warm_nvme_hit_rate"),
             }
         if entry:
             row["benches"][bench] = entry
@@ -156,6 +170,11 @@ def main(argv=None) -> int:
                     hl = entry.get("headline") or {}
                     nums = [f"{k}={v}" for k, v in sorted(hl.items())
                             if isinstance(v, (int, float))][:3]
+                    sr = entry.get("search")
+                    if sr:  # retrieval columns: quality before throughput
+                        nums = [f"recall={sr.get('recall_at_k')}",
+                                f"qps={sr.get('search_qps')}",
+                                f"vs_scan={sr.get('qps_search_over_fullscan')}x"]
                     heads.append(f"{bench}({', '.join(nums)})")
                 print(f"{run.get('git_sha')} {run.get('timestamp')} "
                       f"smoke={run.get('smoke')}: {'; '.join(heads)}")
